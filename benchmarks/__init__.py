@@ -1,0 +1,5 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Run everything:   PYTHONPATH=src python -m benchmarks.run
+Run one:          PYTHONPATH=src python -m benchmarks.run --only availability
+"""

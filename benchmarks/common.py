@@ -1,0 +1,34 @@
+"""Shared helpers for the benchmark modules."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List
+
+ART = os.path.join("artifacts", "bench")
+
+
+def save(name: str, rows: List[Dict[str, Any]]) -> str:
+    os.makedirs(ART, exist_ok=True)
+    path = os.path.join(ART, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    return path
+
+
+def emit_csv(name: str, rows: List[Dict[str, Any]]) -> None:
+    """Print ``name,key=value,...`` lines (the bench_output.txt format)."""
+    for r in rows:
+        kv = ",".join(f"{k}={v}" for k, v in r.items())
+        print(f"{name},{kv}")
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

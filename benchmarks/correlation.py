@@ -1,0 +1,61 @@
+"""Fig. 3 + Fig. 5: preemption correlation structure + availability vs
+search-space size."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit_csv, save
+from repro.cluster.traces import TraceLibrary
+
+
+def _region_of(z: str) -> str:
+    return z.rsplit("-", 1)[0] if (z[-1].isdigit() or z[-2] == "-") \
+        else z[:-1]
+
+
+def run(quick: bool = False) -> List[Dict]:
+    lib = TraceLibrary()
+    rows: List[Dict] = []
+    for name in ("aws-1", "aws-2", "aws-3", "gcp-1"):
+        tr = lib.get(name)
+        corr = tr.zone_correlation()
+        regions = [_region_of(z) for z in tr.zones]
+        intra, inter = [], []
+        for i in range(len(tr.zones)):
+            for j in range(i + 1, len(tr.zones)):
+                (intra if regions[i] == regions[j] else inter).append(
+                    corr[i, j]
+                )
+        # Fig. 5: union availability as the search space widens
+        unions = {}
+        uniq_regions = sorted(set(regions))
+        zone1 = (tr.cap[:, :1] > 0).mean()
+        r1_idx = [k for k, r in enumerate(regions) if r == uniq_regions[0]]
+        region1 = (tr.cap[:, r1_idx] > 0).any(axis=1).mean()
+        all_z = (tr.cap > 0).any(axis=1).mean()
+        rows.append(
+            {
+                "trace": name,
+                "zones": len(tr.zones),
+                "regions": len(uniq_regions),
+                "intra_region_corr": round(float(np.mean(intra)), 3)
+                if intra
+                else None,
+                "inter_region_corr": round(float(np.mean(inter)), 3)
+                if inter
+                else None,
+                "avail_one_zone": round(float(zone1), 3),
+                "avail_one_region": round(float(region1), 3),
+                "avail_all": round(float(all_z), 3),
+            }
+        )
+    save("correlation", rows)
+    emit_csv("correlation", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Fig. 14b: cost (relative to N_Tar on-demand) per (trace × policy),
+including the Omniscient ILP lower bound."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import emit_csv, save
+from repro.cluster.simulator import run_policy_on_trace
+from repro.cluster.traces import TraceLibrary
+
+POLICIES = ("even_spread", "round_robin", "spothedge", "omniscient",
+            "ondemand_only")
+TRACES = ("aws-1", "aws-2", "aws-3", "gcp-1")
+ITYPES = {"aws-1": "p3.2xlarge", "aws-2": "p3.2xlarge",
+          "aws-3": "p3.2xlarge", "gcp-1": "a2-ultragpu-4g"}
+
+
+def run(n_target: int = 4, quick: bool = False) -> List[Dict]:
+    lib = TraceLibrary()
+    rows: List[Dict] = []
+    for tname in TRACES:
+        tr = lib.get(tname)
+        dur = min(tr.duration_s, 5 * 86_400.0) if quick else None
+        for pol in POLICIES:
+            res = run_policy_on_trace(
+                pol, tr, n_target=n_target, itype=ITYPES[tname],
+                control_interval_s=30.0, duration_s=dur,
+            )
+            rows.append(
+                {
+                    "trace": tname,
+                    "policy": pol,
+                    "cost_vs_ondemand": round(res.cost_vs_ondemand, 4),
+                    "spot_cost_frac": round(
+                        res.spot_cost / max(res.total_cost, 1e-9), 3
+                    ),
+                    "availability": round(res.availability, 4),
+                }
+            )
+    save("cost", rows)
+    emit_csv("cost", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

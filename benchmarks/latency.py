@@ -1,0 +1,64 @@
+"""Fig. 15: service latency across traces × workloads × policies."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import emit_csv, save
+from repro.cluster.traces import TraceLibrary
+from repro.configs import get_config
+from repro.core.autoscaler import ConstantTarget
+from repro.core.policy import make_policy
+from repro.serving.sim import ServingSimulator
+from repro.workloads import make_workload
+
+POLICIES = ("even_spread", "round_robin", "spothedge")
+WORKLOADS = ("poisson", "arena", "maf")
+TRACES = ("aws-1", "aws-2", "gcp-1")
+ITYPES = {"aws-1": "g5.48xlarge", "aws-2": "g5.48xlarge",
+          "gcp-1": "g5.48xlarge"}
+
+
+def run(hours: float = 6.0, quick: bool = False) -> List[Dict]:
+    if quick:
+        hours = 3.0
+    lib = TraceLibrary()
+    cfg = get_config("llama3.2-1b")
+    rows: List[Dict] = []
+    for tname in TRACES:
+        tr = lib.get(tname)
+        for wname in WORKLOADS:
+            wl = make_workload(wname, seed=5, **(
+                {"rate_per_s": 1.2} if wname == "poisson"
+                else {"base_rate_per_s": 1.2}
+            ))
+            reqs = wl.generate(hours * 3600 - 600)
+            for pol in POLICIES:
+                sim = ServingSimulator(
+                    tr, make_policy(pol), reqs, cfg,
+                    itype=ITYPES[tname],
+                    autoscaler=ConstantTarget(4),
+                    timeout_s=60.0, workload_name=wname, concurrency=2,
+                )
+                res = sim.run(hours * 3600)
+                rows.append(
+                    {
+                        "trace": tname,
+                        "workload": wname,
+                        "policy": pol,
+                        "mean_s": round(
+                            float(res.latencies_s.mean())
+                            if len(res.latencies_s) else float("nan"), 3
+                        ),
+                        "p50_s": round(res.pct(50), 3),
+                        "p99_s": round(res.pct(99), 3),
+                        "failure_rate": round(res.failure_rate, 4),
+                    }
+                )
+    save("latency", rows)
+    emit_csv("latency", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

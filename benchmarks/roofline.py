@@ -1,0 +1,71 @@
+"""Deliverable (g): roofline table per (arch × shape × mesh) from the
+dry-run artifacts.  Single-pod rows are the §Roofline table; multi-pod rows
+prove the pod axis shards."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import emit_csv, save
+
+DRYRUN = os.path.join("artifacts", "dryrun")
+
+
+def load_records(mesh: str = "single") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh:
+            out.append(r)
+    return out
+
+
+def run(quick: bool = False) -> List[Dict]:
+    rows: List[Dict] = []
+    for mesh in ("single", "multi"):
+        for r in load_records(mesh):
+            if r["status"] != "run":
+                rows.append(
+                    {
+                        "arch": r["arch"],
+                        "shape": r["shape"],
+                        "mesh": mesh,
+                        "status": r["status"],
+                    }
+                )
+                continue
+            roof = r["roofline"]
+            rows.append(
+                {
+                    "arch": r["arch"],
+                    "shape": r["shape"],
+                    "mesh": mesh,
+                    "status": "ok",
+                    "compute_s": f"{roof['compute_s']:.3e}",
+                    "memory_s": f"{roof['memory_s']:.3e}",
+                    "collective_s": f"{roof['collective_s']:.3e}",
+                    "bottleneck": roof["bottleneck"],
+                    "useful_flops_frac": round(
+                        roof["useful_flops_fraction"], 3
+                    ),
+                    "mfu_at_roofline": round(roof["mfu_at_roofline"], 4),
+                    "hbm_gib": round(
+                        r.get("hbm_bytes_per_chip", 0) / 2**30, 2
+                    ),
+                    "fits_16gib": r.get("fits_hbm_16gib"),
+                }
+            )
+    if not rows:
+        print("roofline: no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all --mesh both` first")
+    save("roofline", rows)
+    emit_csv("roofline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

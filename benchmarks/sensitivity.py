@@ -1,0 +1,59 @@
+"""Fig. 14c/d: sensitivity to N_Extra (overprovision) and cold start d."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import emit_csv, save
+from repro.cluster.simulator import SimConfig
+from repro.cluster.traces import TraceLibrary
+from repro.configs import get_config
+from repro.core.autoscaler import ConstantTarget
+from repro.core.policy import make_policy
+from repro.serving.sim import ServingSimulator
+from repro.workloads import make_workload
+
+
+def run(hours: float = 6.0, quick: bool = False) -> List[Dict]:
+    if quick:
+        hours = 3.0
+    tr = TraceLibrary().get("gcp-1")
+    cfg = get_config("llama3.2-1b")
+    wl = make_workload("poisson", rate_per_s=1.0, seed=3)
+    reqs = wl.generate(hours * 3600 - 600)
+    rows: List[Dict] = []
+
+    def one(n_extra: int, cold: float) -> Dict:
+        sim = ServingSimulator(
+            tr, make_policy("spothedge", num_overprovision=n_extra), reqs,
+            cfg, itype="a2-ultragpu-4g",
+            autoscaler=ConstantTarget(4), timeout_s=60.0, concurrency=2,
+            workload_name="poisson",
+            sim_config=SimConfig(itype="a2-ultragpu-4g",
+                                 cold_start_s=cold,
+                                 control_interval_s=15.0),
+        )
+        res = sim.run(hours * 3600)
+        return {
+            "p50_s": round(res.pct(50), 3),
+            "p99_s": round(res.pct(99), 3),
+            "failure_rate": round(res.failure_rate, 4),
+            "cost_vs_od": round(res.cost_vs_ondemand, 4),
+            "availability": round(res.availability, 4),
+        }
+
+    # Fig. 14c: sweep N_Extra at the default cold start
+    for n_extra in (0, 1, 2, 3, 4):
+        rows.append({"sweep": "n_extra", "n_extra": n_extra,
+                     "cold_start_s": 183.0, **one(n_extra, 183.0)})
+    # Fig. 14d: sweep cold start at the default N_Extra
+    for cold in (60.0, 183.0, 300.0, 600.0):
+        rows.append({"sweep": "cold_start", "n_extra": 2,
+                     "cold_start_s": cold, **one(2, cold)})
+    save("sensitivity", rows)
+    emit_csv("sensitivity", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

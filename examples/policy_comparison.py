@@ -1,0 +1,29 @@
+"""Policy comparison across all four spot traces (Fig. 14 in miniature),
+including the Omniscient ILP lower bound.
+
+    PYTHONPATH=src python examples/policy_comparison.py [--full]
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.cluster.simulator import run_policy_on_trace
+from repro.cluster.traces import TraceLibrary
+
+FULL = "--full" in sys.argv
+ITYPES = {"aws-1": "p3.2xlarge", "aws-2": "p3.2xlarge",
+          "aws-3": "p3.2xlarge", "gcp-1": "a2-ultragpu-4g"}
+
+lib = TraceLibrary()
+print(f"{'policy':>16s} {'trace':>7s} {'avail':>7s} {'cost/OD':>8s} "
+      f"{'preempt':>8s}")
+for tname in ("aws-1", "aws-2", "aws-3", "gcp-1"):
+    tr = lib.get(tname)
+    dur = None if FULL else min(tr.duration_s, 4 * 86_400.0)
+    for pol in ("even_spread", "round_robin", "spothedge", "omniscient"):
+        res = run_policy_on_trace(
+            pol, tr, n_target=4, itype=ITYPES[tname],
+            control_interval_s=30.0, duration_s=dur,
+        )
+        print(f"{pol:>16s} {tname:>7s} {res.availability:7.2%} "
+              f"{res.cost_vs_ondemand:8.2%} {res.n_preemptions:8d}")

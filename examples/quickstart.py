@@ -1,0 +1,28 @@
+"""Quickstart: run SpotHedge against a recorded spot trace.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Launches a 4-replica service on the GCP A100 trace (volatile!), lets
+SpotHedge place spot replicas across zones/regions with on-demand
+fallback, and prints availability + cost vs an all-on-demand deployment.
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.cluster.simulator import run_policy_on_trace
+from repro.cluster.traces import TraceLibrary
+
+trace = TraceLibrary().get("gcp-1")          # 3-day a2-ultragpu-4g trace
+print(f"trace {trace.name}: {len(trace.zones)} zones, "
+      f"{trace.duration_s/3600:.0f}h")
+
+for policy in ("spothedge", "even_spread", "round_robin", "ondemand_only"):
+    res = run_policy_on_trace(
+        policy, trace, n_target=4, itype="a2-ultragpu-4g",
+        control_interval_s=30.0,
+    )
+    print(res.summary())
+
+print("\nSpotHedge keeps availability near on-demand at a fraction of the "
+      "cost —\nthe paper's Fig. 14a/14b result.")

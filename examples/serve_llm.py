@@ -1,0 +1,112 @@
+"""End-to-end serving driver: a REAL JAX engine fleet behind SpotHedge.
+
+Two live replicas (reduced llama3.2 backbones) serve batched requests
+through the least-loaded balancer while a preemption is injected mid-run —
+the in-flight requests of the killed replica are retried client-side on the
+survivor, exactly the paper's §4 "Preemption handling" semantics.
+
+    PYTHONPATH=src python examples/serve_llm.py
+"""
+
+import sys, os, time
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+
+
+class LiveReplica:
+    """A real prefill+decode engine with slot-based continuous batching."""
+
+    def __init__(self, name: str, cfg, model, params, max_batch=4,
+                 max_len=96):
+        self.name, self.cfg, self.model, self.params = (
+            name, cfg, model, params
+        )
+        self.alive = True
+        self._prefill = jax.jit(
+            lambda p, t, c: model.prefill(p, t, c)
+        )
+        self._decode = jax.jit(lambda p, t, c: model.decode_step(p, t, c))
+        self.max_len = max_len
+        self.inflight = []           # (req_id, cache, tok, remaining)
+
+    def submit(self, req_id: int, prompt, out_tokens: int):
+        cache = self.model.init_cache(1, self.max_len)
+        logits, cache = self._prefill(self.params, prompt[None], cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        self.inflight.append([req_id, cache, tok, out_tokens, [int(tok[0, 0])]])
+
+    def step(self):
+        """One decode step for every in-flight request."""
+        done = []
+        still = []
+        for item in self.inflight:
+            req_id, cache, tok, remaining, out = item
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(int(tok[0, 0]))
+            remaining -= 1
+            if remaining <= 0:
+                done.append((req_id, out))
+            else:
+                still.append([req_id, cache, tok, remaining, out])
+        self.inflight = still
+        return done
+
+    def kill(self):
+        """Preemption: drop in-flight work, return ids for client retry."""
+        self.alive = False
+        failed = [item[0] for item in self.inflight]
+        self.inflight = []
+        return failed
+
+
+def main():
+    cfg = get_smoke_config("llama3.2-1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reps = [LiveReplica(f"replica-{i}", cfg, model, params)
+            for i in range(2)]
+
+    rng = jax.random.PRNGKey(7)
+    prompts = {
+        i: jax.random.randint(jax.random.fold_in(rng, i), (12,), 0,
+                              cfg.vocab_size)
+        for i in range(8)
+    }
+    pending = list(prompts)
+    completed, retried = {}, []
+
+    t0 = time.time()
+    step = 0
+    while len(completed) < len(prompts):
+        ready = [r for r in reps if r.alive]
+        # least-loaded dispatch of pending requests
+        while pending and ready:
+            req = pending.pop(0)
+            target = min(ready, key=lambda r: len(r.inflight))
+            target.submit(req, prompts[req], out_tokens=16)
+            print(f"[lb] request {req} -> {target.name}")
+        for r in ready:
+            for req_id, out in r.step():
+                completed[req_id] = out
+                print(f"[{r.name}] request {req_id} done "
+                      f"({len(out)} tokens)")
+        step += 1
+        if step == 4 and reps[0].alive:
+            failed = reps[0].kill()
+            print(f"[cloud] PREEMPTION kills {reps[0].name}; "
+                  f"retrying {failed} on survivors (client-side retry)")
+            pending = failed + pending
+    dt = time.time() - t0
+    tok_total = sum(len(v) for v in completed.values())
+    print(f"\nserved {len(completed)} requests / {tok_total} tokens "
+          f"in {dt:.1f}s across a preemption — zero lost requests")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""repro — a production-grade JAX reproduction of SkyServe / SpotHedge.
+
+    SkyServe: Serving AI Models across Regions and Clouds with Spot Instances
+    (Mao, Xia, Wu, Chiang, Griggs, Bhardwaj, Yang, Shenker, Stoica — EuroSys'25)
+
+Package layout
+--------------
+``repro.core``         SpotHedge policy (Alg. 1 + Dynamic Fallback), baselines,
+                       the load-based autoscaler and the Omniscient ILP oracle.
+``repro.cluster``      Multi-cloud substrate: zone/region/cloud catalog with
+                       Table-1 pricing, spot-obtainability traces, instance
+                       lifecycle FSM and the discrete-event simulator.
+``repro.workloads``    Request arrival processes (Poisson / Arena / MAF).
+``repro.models``       The 10 assigned architectures as composable JAX modules.
+``repro.distributed``  Sharding rules, checkpointing, ZeRO-1, elastic re-mesh,
+                       gradient compression.
+``repro.serving``      The JAX data plane: inference engine, replicas, load
+                       balancer, service controller.
+``repro.training``     Optimizer + train-step factory (remat, microbatching).
+``repro.kernels``      Pallas TPU kernels (flash attention, flash decode,
+                       selective scan, MoE grouped matmul) + jnp oracles.
+``repro.configs``      One config per assigned architecture + shape suite.
+``repro.launch``       Production mesh, multi-pod dry-run, train/serve drivers.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,35 @@
+"""Multi-cloud substrate: catalog, spot traces, instance FSM, simulator."""
+
+from repro.cluster.catalog import (
+    Catalog,
+    CloudSpec,
+    InstanceType,
+    Zone,
+    default_catalog,
+)
+from repro.cluster.instance import Instance, InstanceKind, InstanceState
+from repro.cluster.simulator import ClusterSimulator, SimConfig, SimResult
+from repro.cluster.traces import (
+    SpotTrace,
+    TraceLibrary,
+    load_trace,
+    synth_correlated_trace,
+)
+
+__all__ = [
+    "Catalog",
+    "CloudSpec",
+    "InstanceType",
+    "Zone",
+    "default_catalog",
+    "Instance",
+    "InstanceKind",
+    "InstanceState",
+    "ClusterSimulator",
+    "SimConfig",
+    "SimResult",
+    "SpotTrace",
+    "TraceLibrary",
+    "load_trace",
+    "synth_correlated_trace",
+]

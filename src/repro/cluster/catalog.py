@@ -1,0 +1,325 @@
+"""Cloud / region / zone / instance-type catalog with paper-faithful pricing.
+
+The paper's Table 1 gives spot price as a *fraction of on-demand* per
+(cloud, GPU) pair.  We encode those ratios verbatim and attach representative
+absolute on-demand prices (the paper quotes g5.48xlarge at $16.3/h on-demand
+and $4.9/h spot, which we reproduce exactly).  The catalog also carries the
+TPU v5e SKUs used by the hardware-adaptation layer: on GCP, v5e pod slices are
+offered both on-demand and preemptible, so SpotHedge transfers unchanged.
+
+Zones follow the AWS/GCP naming convention (``us-east-1a``).  A ``Zone`` is
+the paper's failure domain unit: preemptions correlate *within* a region's
+zones and are nearly independent *across* regions (Fig. 3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Instance types
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceType:
+    """A purchasable machine shape.
+
+    ``spot_ratio`` is Table 1's spot/on-demand price ratio for the cloud the
+    instance belongs to; per-zone price wobble is added by the catalog (the
+    paper notes spot prices are stable in time but differ slightly across
+    zones/regions).
+    """
+
+    name: str
+    cloud: str
+    accelerator: str            # e.g. "A10G", "V100", "T4", "TPUv5e-8"
+    accel_count: int
+    od_price: float             # $/hour, on-demand
+    spot_ratio: float           # spot price as fraction of on-demand
+    hbm_gib_per_accel: float = 16.0
+    peak_bf16_tflops: float = 197.0  # per accelerator (v5e default)
+
+    @property
+    def spot_price(self) -> float:
+        return self.od_price * self.spot_ratio
+
+
+# Table 1 (paper, Oct 2024): spot cost as % of on-demand, per cloud × GPU.
+# Ranges in the table are encoded as their midpoint.
+_TABLE1: Mapping[Tuple[str, str], float] = {
+    ("aws", "A100"): 0.10,
+    ("aws", "V100"): 0.165,   # 8–25%
+    ("aws", "T4"): 0.15,      # 13–17%
+    ("aws", "K80"): 0.19,     # 13–25%
+    ("azure", "A100"): 0.50,
+    ("azure", "V100"): 0.25,
+    ("azure", "T4"): 0.10,
+    ("azure", "K80"): 0.10,
+    ("gcp", "A100"): 0.33,
+    ("gcp", "V100"): 0.33,
+    ("gcp", "T4"): 0.17,      # 14–20%
+    ("gcp", "K80"): 0.10,
+    # TPU v5e preemptible pricing on GCP is ~1/3 of on-demand — same bracket
+    # as GCP GPU spot, which is what makes the policy transfer economically.
+    ("gcp", "TPUv5e"): 0.33,
+}
+
+
+def _itype(
+    name: str,
+    cloud: str,
+    accel: str,
+    count: int,
+    od: float,
+    *,
+    table_key: Optional[str] = None,
+    hbm: float = 16.0,
+    tflops: float = 197.0,
+) -> InstanceType:
+    ratio = _TABLE1[(cloud, table_key or accel)]
+    return InstanceType(
+        name=name,
+        cloud=cloud,
+        accelerator=accel,
+        accel_count=count,
+        od_price=od,
+        spot_ratio=ratio,
+        hbm_gib_per_accel=hbm,
+        peak_bf16_tflops=tflops,
+    )
+
+
+# The instance types used in the paper's evaluation plus the TPU SKUs used by
+# our data plane.  Absolute prices are representative of Oct-2024 list prices;
+# the two quoted in the paper (g5.48xlarge OD $16.3 / spot $4.9) are exact.
+DEFAULT_INSTANCE_TYPES: Tuple[InstanceType, ...] = (
+    # paper §5.1 run 1: Llama-2-70B on 8×A10G
+    InstanceType("g5.48xlarge", "aws", "A10G", 8, 16.3, 4.9 / 16.3, 24.0, 70.0),
+    # paper §5.1 run 2: OPT-6.7B on 4×T4
+    _itype("g4dn.12xlarge", "aws", "T4", 4, 3.912, hbm=16.0, tflops=65.0),
+    # paper §5.2 traces
+    _itype("p3.2xlarge", "aws", "V100", 1, 3.06, hbm=16.0, tflops=112.0),
+    _itype("a2-ultragpu-4g", "gcp", "A100", 4, 20.55, hbm=80.0, tflops=312.0),
+    _itype("p4d.24xlarge", "aws", "A100", 8, 32.77, hbm=40.0, tflops=312.0),
+    _itype("Standard_NC24ads_A100_v4", "azure", "A100", 1, 3.67, hbm=80.0,
+           tflops=312.0),
+    # TPU v5e slices (GCP): the unit our JAX replicas actually run on.
+    _itype("v5e-8", "gcp", "TPUv5e", 8, 9.60, table_key="TPUv5e",
+           hbm=16.0, tflops=197.0),
+    _itype("v5e-16", "gcp", "TPUv5e", 16, 19.20, table_key="TPUv5e",
+           hbm=16.0, tflops=197.0),
+    _itype("v5e-256", "gcp", "TPUv5e", 256, 307.20, table_key="TPUv5e",
+           hbm=16.0, tflops=197.0),
+)
+
+
+# ---------------------------------------------------------------------------
+# Zones and regions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Zone:
+    """A failure domain: (cloud, region, zone)."""
+
+    name: str                   # e.g. "us-east-1a"
+    region: str                 # e.g. "us-east-1"
+    cloud: str                  # "aws" | "gcp" | "azure"
+    # Multiplier on the instance type's base price in this zone (paper: spot
+    # prices differ slightly across zones/regions).
+    price_multiplier: float = 1.0
+
+    def __str__(self) -> str:  # pragma: no cover - cosmetic
+        return f"{self.cloud}:{self.name}"
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudSpec:
+    """Cloud-level behaviour knobs (preemption warning; see §2.3)."""
+
+    name: str
+    preemption_warning_s: float     # best-effort warning before a preemption
+    warning_delivery_prob: float    # warnings are best-effort
+
+
+DEFAULT_CLOUDS: Tuple[CloudSpec, ...] = (
+    CloudSpec("aws", preemption_warning_s=120.0, warning_delivery_prob=0.9),
+    CloudSpec("gcp", preemption_warning_s=30.0, warning_delivery_prob=0.9),
+    CloudSpec("azure", preemption_warning_s=30.0, warning_delivery_prob=0.9),
+)
+
+
+# Inter-region RTT model (§3.1, Fig. 6b): ~100 ms US<->EU round trip; small
+# within-region latency.  Keys are region prefixes.
+_REGION_GEO: Mapping[str, str] = {
+    "us-east": "us-east",
+    "us-west": "us-west",
+    "eu": "eu",
+    "asia": "asia",
+}
+
+_GEO_RTT_MS: Mapping[Tuple[str, str], float] = {
+    ("us-east", "us-east"): 2.0,
+    ("us-west", "us-west"): 2.0,
+    ("eu", "eu"): 2.0,
+    ("asia", "asia"): 2.0,
+    ("us-east", "us-west"): 60.0,
+    ("us-east", "eu"): 95.0,
+    ("us-west", "eu"): 140.0,
+    ("us-east", "asia"): 180.0,
+    ("us-west", "asia"): 110.0,
+    ("eu", "asia"): 240.0,
+}
+
+
+def _geo_of(region: str) -> str:
+    for prefix, geo in _REGION_GEO.items():
+        if region.startswith(prefix):
+            return geo
+    return "us-east"
+
+
+def region_rtt_ms(region_a: str, region_b: str) -> float:
+    """Round-trip latency between two regions (Fig. 6b model)."""
+    ga, gb = _geo_of(region_a), _geo_of(region_b)
+    if (ga, gb) in _GEO_RTT_MS:
+        return _GEO_RTT_MS[(ga, gb)]
+    return _GEO_RTT_MS[(gb, ga)]
+
+
+def _mk_zones() -> Tuple[Zone, ...]:
+    """The default zone universe, mirroring the zones of the paper's traces.
+
+    AWS: us-east-1{a,c,f}, us-east-2{a,b}, us-west-2{a,b,c}, eu-central-1{a,b}
+    GCP: us-central1{a,b,c}, us-west1{a,b}, europe-west4{a,b}
+    Azure: eastus{1,2}, westeurope{1,2}
+    """
+    zones: List[Zone] = []
+
+    def add(cloud: str, region: str, suffixes: Sequence[str],
+            mult: float) -> None:
+        for i, s in enumerate(suffixes):
+            zones.append(
+                Zone(
+                    name=f"{region}{s}",
+                    region=region,
+                    cloud=cloud,
+                    # deterministic small per-zone wobble
+                    price_multiplier=mult * (1.0 + 0.015 * i),
+                )
+            )
+
+    add("aws", "us-east-1", ["a", "c", "f"], 1.00)
+    add("aws", "us-east-2", ["a", "b"], 0.97)
+    add("aws", "us-west-2", ["a", "b", "c"], 0.95)
+    add("aws", "eu-central-1", ["a", "b"], 1.08)
+    add("gcp", "us-central1", ["-a", "-b", "-c"], 1.00)
+    add("gcp", "us-west1", ["-a", "-b"], 0.98)
+    add("gcp", "europe-west4", ["-a", "-b"], 1.06)
+    add("azure", "eastus", ["-1", "-2"], 1.02)
+    add("azure", "westeurope", ["-1", "-2"], 1.10)
+    return tuple(zones)
+
+
+DEFAULT_ZONES: Tuple[Zone, ...] = _mk_zones()
+
+
+# ---------------------------------------------------------------------------
+# Catalog
+# ---------------------------------------------------------------------------
+
+
+class Catalog:
+    """Immutable lookup service over clouds, zones and instance types.
+
+    The service controller polls this (the paper polls the cloud pricing API)
+    when SELECT-NEXT-ZONE breaks ties by cost.
+    """
+
+    def __init__(
+        self,
+        zones: Sequence[Zone] = DEFAULT_ZONES,
+        instance_types: Sequence[InstanceType] = DEFAULT_INSTANCE_TYPES,
+        clouds: Sequence[CloudSpec] = DEFAULT_CLOUDS,
+    ) -> None:
+        self._zones: Dict[str, Zone] = {z.name: z for z in zones}
+        self._itypes: Dict[str, InstanceType] = {
+            t.name: t for t in instance_types
+        }
+        self._clouds: Dict[str, CloudSpec] = {c.name: c for c in clouds}
+
+    # -- zones ---------------------------------------------------------
+    @property
+    def zones(self) -> List[Zone]:
+        return list(self._zones.values())
+
+    def zone(self, name: str) -> Zone:
+        return self._zones[name]
+
+    def zones_in_region(self, region: str) -> List[Zone]:
+        return [z for z in self._zones.values() if z.region == region]
+
+    def zones_in_cloud(self, cloud: str) -> List[Zone]:
+        return [z for z in self._zones.values() if z.cloud == cloud]
+
+    def regions(self) -> List[str]:
+        return sorted({z.region for z in self._zones.values()})
+
+    def filter_zones(
+        self,
+        *,
+        clouds: Optional[Sequence[str]] = None,
+        regions: Optional[Sequence[str]] = None,
+        exclude_zones: Optional[Sequence[str]] = None,
+    ) -> List[Zone]:
+        """Apply the user's ``any_of`` resource filter (Listing 1)."""
+        out = []
+        excl = set(exclude_zones or ())
+        for z in self._zones.values():
+            if clouds and z.cloud not in clouds:
+                continue
+            if regions and z.region not in regions:
+                continue
+            if z.name in excl:
+                continue
+            out.append(z)
+        return out
+
+    # -- instance types -------------------------------------------------
+    def instance_type(self, name: str) -> InstanceType:
+        return self._itypes[name]
+
+    @property
+    def instance_types(self) -> List[InstanceType]:
+        return list(self._itypes.values())
+
+    # -- pricing ---------------------------------------------------------
+    def spot_price(self, itype: str, zone: str) -> float:
+        t, z = self._itypes[itype], self._zones[zone]
+        return t.spot_price * z.price_multiplier
+
+    def od_price(self, itype: str, zone: str) -> float:
+        t, z = self._itypes[itype], self._zones[zone]
+        return t.od_price * z.price_multiplier
+
+    def cheapest_zone(
+        self, itype: str, candidates: Sequence[str], *, spot: bool = True
+    ) -> str:
+        """MIN-COST from Alg. 1 (line 20/22)."""
+        if not candidates:
+            raise ValueError("cheapest_zone: empty candidate set")
+        price = self.spot_price if spot else self.od_price
+        return min(candidates, key=lambda z: (price(itype, z), z))
+
+    # -- clouds ----------------------------------------------------------
+    def cloud(self, name: str) -> CloudSpec:
+        return self._clouds[name]
+
+    def rtt_ms(self, region_a: str, region_b: str) -> float:
+        return region_rtt_ms(region_a, region_b)
+
+
+def default_catalog() -> Catalog:
+    return Catalog()

@@ -1,0 +1,417 @@
+"""Discrete-event cluster simulator — the §5.2 methodology.
+
+Replays a spot obtainability trace against a policy: at each control tick,
+
+1. **trace transitions** — if a zone's spot capacity drops below the number
+   of active spot instances, the excess instances are preempted (newest
+   first, matching the observed behaviour that fresh instances are evicted
+   first in a crunch).  Policies receive best-effort preemption warnings
+   ``warning_s`` ahead when the trace already shows the upcoming drop (real
+   clouds warn 30-120 s; delivery is probabilistic — §2.3).
+2. **instance FSM steps** — provisioning instances become ready after the
+   cold start delay ``d``; policies get ``on_ready`` (Alg. 1 HANDLE-LAUNCH).
+3. **policy tick** — ``policy.decide(obs)`` returns launch/terminate
+   actions.  Spot launches succeed iff the zone has remaining capacity;
+   a failed launch fires ``on_launch_failure`` and costs nothing.
+4. **metrics** — availability (ready >= N_Tar), ready-count time series and
+   per-second billing (including the provisioning period, §2.3).
+
+The serving-quality simulator (``repro.serving.sim``) composes this class
+with the request/LB layer; this module is policy-vs-trace only, which is all
+Fig. 14a/14b need.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster.catalog import Catalog, Zone, default_catalog
+from repro.cluster.instance import Instance, InstanceKind, InstanceState
+from repro.cluster.traces import SpotTrace
+from repro.core.autoscaler import Autoscaler, ConstantTarget
+from repro.core.policy import (
+    LaunchOnDemand,
+    LaunchSpot,
+    Observation,
+    Policy,
+    Terminate,
+)
+
+
+@dataclasses.dataclass
+class SimConfig:
+    itype: str = "p3.2xlarge"
+    cold_start_s: float = 183.0      # §2.3: measured Llama-2-7B/vLLM deploy
+    control_interval_s: float = 30.0
+    warning_enabled: bool = True
+    seed: int = 0
+    # terminate-before-preempt grace: when a warning arrives, policies may
+    # proactively launch; the simulator itself takes no action.
+    record_series: bool = True
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Aggregated metrics of one simulated run."""
+
+    policy: str
+    trace: str
+    duration_s: float
+    availability: float              # fraction of ticks with ready >= N_Tar
+    total_cost: float                # $ (absolute, catalog prices)
+    spot_cost: float
+    od_cost: float
+    cost_vs_ondemand: float          # total cost / cost of N_Tar OD replicas
+    n_preemptions: int
+    n_launch_failures: int
+    n_spot_launches: int
+    n_od_launches: int
+    # time series sampled each tick (empty when record_series=False)
+    t: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0)
+    )
+    ready_spot: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, dtype=int)
+    )
+    ready_od: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, dtype=int)
+    )
+    n_target_series: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.empty(0, dtype=int)
+    )
+
+    def summary(self) -> str:
+        return (
+            f"{self.policy:>16s} @ {self.trace:<8s} "
+            f"avail={self.availability:6.2%} "
+            f"cost={self.cost_vs_ondemand:6.2%} of OD "
+            f"preempt={self.n_preemptions:4d} "
+            f"launch_fail={self.n_launch_failures:4d}"
+        )
+
+
+class ClusterSimulator:
+    """Run one policy against one trace."""
+
+    def __init__(
+        self,
+        trace: SpotTrace,
+        policy: Policy,
+        *,
+        catalog: Optional[Catalog] = None,
+        autoscaler: Optional[Autoscaler] = None,
+        config: Optional[SimConfig] = None,
+        zones: Optional[Sequence[str]] = None,
+        # hook called each tick AFTER state transitions, BEFORE policy
+        # decisions — the serving simulator uses it to pump requests.
+        tick_hook: Optional[Callable[[float, "ClusterSimulator"], None]] = None,
+    ) -> None:
+        self.trace = trace
+        self.policy = policy
+        self.catalog = catalog or default_catalog()
+        self.autoscaler = autoscaler or ConstantTarget(4)
+        self.config = config or SimConfig()
+        self.rng = np.random.default_rng(self.config.seed)
+        self.tick_hook = tick_hook
+
+        zone_names = list(zones) if zones is not None else list(trace.zones)
+        missing = [z for z in zone_names if z not in trace.zones]
+        if missing:
+            raise ValueError(f"zones {missing} not present in trace")
+        self.zones: List[Zone] = [self.catalog.zone(z) for z in zone_names]
+        self.zone_names = zone_names
+
+        self.instances: List[Instance] = []   # active only (dead pruned)
+        self._dead_spot_cost = 0.0
+        self._dead_od_cost = 0.0
+        self.now = 0.0
+        self.n_preemptions = 0
+        self.n_launch_failures = 0
+        self.n_spot_launches = 0
+        self.n_od_launches = 0
+        self._series_t: List[float] = []
+        self._series_rs: List[int] = []
+        self._series_ro: List[int] = []
+        self._series_nt: List[int] = []
+        self._preempt_listeners: List[Callable[[Instance, float], None]] = []
+        self._ready_listeners: List[Callable[[Instance, float], None]] = []
+
+        self.policy.reset(self.zones, self.catalog, self.config.itype)
+
+    # -- listener registration (serving layer) --------------------------
+    def add_preempt_listener(
+        self, fn: Callable[[Instance, float], None]
+    ) -> None:
+        self._preempt_listeners.append(fn)
+
+    def add_ready_listener(
+        self, fn: Callable[[Instance, float], None]
+    ) -> None:
+        self._ready_listeners.append(fn)
+
+    # -- state views -----------------------------------------------------
+    def active_spot(self, zone: Optional[str] = None) -> List[Instance]:
+        return [
+            i
+            for i in self.instances
+            if i.is_spot()
+            and i.is_active()
+            and (zone is None or i.zone == zone)
+        ]
+
+    def ready_instances(self) -> List[Instance]:
+        return [i for i in self.instances if i.is_ready()]
+
+    def _observation(self, n_target: int) -> Observation:
+        spot_ready, spot_prov, od_ready, od_prov = [], [], [], []
+        for i in self.instances:
+            if not i.is_active():
+                continue
+            if i.is_spot():
+                (spot_ready if i.is_ready() else spot_prov).append(i)
+            else:
+                (od_ready if i.is_ready() else od_prov).append(i)
+        return Observation(
+            now=self.now,
+            n_target=n_target,
+            spot_ready=spot_ready,
+            spot_provisioning=spot_prov,
+            od_ready=od_ready,
+            od_provisioning=od_prov,
+        )
+
+    # -- mechanics -------------------------------------------------------
+    def _launch(self, kind: InstanceKind, zone_name: str) -> Optional[Instance]:
+        zone = self.catalog.zone(zone_name)
+        if kind is InstanceKind.SPOT:
+            cap = self.trace.capacity(zone_name, self.now)
+            in_use = len(self.active_spot(zone_name))
+            if in_use + 1 > cap:
+                self.n_launch_failures += 1
+                self.policy.on_launch_failure(zone_name, self.now)
+                return None
+            price = self.catalog.spot_price(self.config.itype, zone_name)
+            self.n_spot_launches += 1
+        else:
+            # On-demand is modelled as always obtainable (§5.1 Discussion:
+            # "on-demand instances are typically obtainable across regions").
+            price = self.catalog.od_price(self.config.itype, zone_name)
+            self.n_od_launches += 1
+        inst = Instance(
+            zone=zone_name,
+            region=zone.region,
+            cloud=zone.cloud,
+            kind=kind,
+            itype=self.config.itype,
+            hourly_price=price,
+            launched_at=self.now,
+            cold_start_s=self.config.cold_start_s,
+        )
+        self.instances.append(inst)
+        return inst
+
+    def _apply_trace(self) -> None:
+        """Preempt spot instances in zones whose capacity dropped."""
+        row = self.trace.capacity_row(self.now)
+        for zone_name in self.zone_names:
+            cap = row[zone_name]
+            active = self.active_spot(zone_name)
+            excess = len(active) - cap
+            if excess <= 0:
+                continue
+            # newest first: fresh instances are evicted first in a crunch
+            active.sort(key=lambda i: -i.launched_at)
+            for inst in active[:excess]:
+                inst.preempt(self.now)
+                self.n_preemptions += 1
+                self.policy.on_preemption(zone_name, self.now)
+                for fn in self._preempt_listeners:
+                    fn(inst, self.now)
+                self._retire(inst)
+
+    def _deliver_warnings(self) -> None:
+        """Best-effort preemption warnings (§2.3): look ahead by the cloud's
+        advertised warning lead (120 s AWS, 30 s GCP/Azure); if capacity will
+        drop, warn (probabilistically — warnings are best-effort)."""
+        if not self.config.warning_enabled:
+            return
+        now_row = self.trace.capacity_row(self.now)
+        for zone_name in self.zone_names:
+            cloud = self.catalog.zone(zone_name).cloud
+            spec = self.catalog.cloud(cloud)
+            horizon = self.now + max(
+                spec.preemption_warning_s, self.trace.dt
+            )
+            if horizon >= self.trace.duration_s:
+                continue
+            if self.trace.capacity(zone_name, horizon) < now_row[zone_name]:
+                if self.rng.random() < spec.warning_delivery_prob:
+                    for inst in self.active_spot(zone_name):
+                        if inst.warned_at is None:
+                            inst.warned_at = self.now
+                    self.policy.on_warning(zone_name, self.now)
+
+    def _retire(self, inst: Instance) -> None:
+        """Move a dead instance out of the scan list; bank its cost."""
+        cost = inst.cost(self.now)
+        if inst.is_spot():
+            self._dead_spot_cost += cost
+        else:
+            self._dead_od_cost += cost
+        try:
+            self.instances.remove(inst)
+        except ValueError:  # pragma: no cover - already pruned
+            pass
+
+    def _step_instances(self) -> None:
+        for inst in self.instances:
+            if inst.state is InstanceState.PROVISIONING:
+                was_ready = inst.is_ready()
+                inst.step_to(self.now)
+                if inst.is_ready() and not was_ready:
+                    if inst.is_spot():
+                        self.policy.on_ready(inst.zone, self.now)
+                    for fn in self._ready_listeners:
+                        fn(inst, self.now)
+
+    def _execute(self, actions) -> None:
+        by_id = {i.id: i for i in self.instances}
+        for act in actions:
+            if isinstance(act, LaunchSpot):
+                self._launch(InstanceKind.SPOT, act.zone)
+            elif isinstance(act, LaunchOnDemand):
+                self._launch(InstanceKind.ON_DEMAND, act.zone)
+            elif isinstance(act, Terminate):
+                inst = by_id.get(act.instance_id)
+                if inst is not None and inst.is_active():
+                    inst.terminate(self.now)
+                    self._retire(inst)
+            else:  # pragma: no cover - defensive
+                raise TypeError(f"unknown action {act!r}")
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, duration_s: Optional[float] = None) -> SimResult:
+        dur = float(duration_s or self.trace.duration_s)
+        dt = self.config.control_interval_s
+        ticks = int(dur / dt)
+        ok_ticks = 0
+
+        for k in range(ticks):
+            self.now = k * dt
+            self._apply_trace()
+            self._step_instances()
+            self._deliver_warnings()
+            if self.tick_hook is not None:
+                self.tick_hook(self.now, self)
+            n_target = self.autoscaler.target(self.now)
+            obs = self._observation(n_target)
+            self._execute(self.policy.decide(obs))
+            # metrics AFTER actions so cold starts are charged immediately
+            ready = len(self.ready_instances())
+            if ready >= n_target:
+                ok_ticks += 1
+            if self.config.record_series:
+                self._series_t.append(self.now)
+                self._series_rs.append(
+                    sum(1 for i in self.ready_instances() if i.is_spot())
+                )
+                self._series_ro.append(
+                    sum(1 for i in self.ready_instances() if not i.is_spot())
+                )
+                self._series_nt.append(n_target)
+
+        self.now = ticks * dt
+        return self._result(dur, ok_ticks, ticks)
+
+    # -- results ----------------------------------------------------------
+    def _result(self, dur: float, ok_ticks: int, ticks: int) -> SimResult:
+        spot_cost = self._dead_spot_cost + sum(
+            i.cost(self.now) for i in self.instances if i.is_spot()
+        )
+        od_cost = self._dead_od_cost + sum(
+            i.cost(self.now) for i in self.instances if not i.is_spot()
+        )
+        # denominator: keeping N_Tar on-demand replicas in the cheapest zone
+        # for the whole run (the paper's "relative to OD" normalization).
+        od_zone = min(
+            self.zone_names,
+            key=lambda z: self.catalog.od_price(self.config.itype, z),
+        )
+        mean_target = (
+            float(np.mean(self._series_nt))
+            if self._series_nt
+            else float(self.autoscaler.target(0.0))
+        )
+        od_ref = (
+            self.catalog.od_price(self.config.itype, od_zone)
+            * mean_target
+            * dur
+            / 3600.0
+        )
+        return SimResult(
+            policy=self.policy.name,
+            trace=self.trace.name,
+            duration_s=dur,
+            availability=ok_ticks / max(ticks, 1),
+            total_cost=spot_cost + od_cost,
+            spot_cost=spot_cost,
+            od_cost=od_cost,
+            cost_vs_ondemand=(spot_cost + od_cost) / max(od_ref, 1e-9),
+            n_preemptions=self.n_preemptions,
+            n_launch_failures=self.n_launch_failures,
+            n_spot_launches=self.n_spot_launches,
+            n_od_launches=self.n_od_launches,
+            t=np.asarray(self._series_t),
+            ready_spot=np.asarray(self._series_rs, dtype=int),
+            ready_od=np.asarray(self._series_ro, dtype=int),
+            n_target_series=np.asarray(self._series_nt, dtype=int),
+        )
+
+
+def run_policy_on_trace(
+    policy_name: str,
+    trace: SpotTrace,
+    *,
+    n_target: int = 4,
+    itype: str = "p3.2xlarge",
+    cold_start_s: float = 183.0,
+    control_interval_s: float = 30.0,
+    duration_s: Optional[float] = None,
+    seed: int = 0,
+    policy_kwargs: Optional[dict] = None,
+) -> SimResult:
+    """Convenience one-shot runner used by benchmarks and tests."""
+    from repro.core.policy import make_policy
+
+    policy = make_policy(policy_name, **(policy_kwargs or {}))
+    if policy_name == "omniscient":
+        from repro.core.omniscient import solve_omniscient
+
+        cat = default_catalog()
+        k = (
+            cat.od_price(itype, trace.zones[0])
+            / cat.spot_price(itype, trace.zones[0])
+        )
+        schedule = solve_omniscient(
+            trace,
+            n_target=n_target,
+            cold_start_s=cold_start_s,
+            k_ratio=k,
+            avail_target=0.99,
+        )
+        policy.attach_schedule(schedule)
+    sim = ClusterSimulator(
+        trace,
+        policy,
+        autoscaler=ConstantTarget(n_target),
+        config=SimConfig(
+            itype=itype,
+            cold_start_s=cold_start_s,
+            control_interval_s=control_interval_s,
+            seed=seed,
+        ),
+    )
+    return sim.run(duration_s)

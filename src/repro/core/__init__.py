@@ -1,0 +1,58 @@
+"""SpotHedge — the paper's primary contribution — plus baselines and oracle.
+
+Contents
+--------
+``policy``      Observation / Action / Policy interfaces shared by the
+                simulator and the live serving controller.
+``spothedge``   SpotHedge = Dynamic Placement (Alg. 1) + overprovisioning +
+                Dynamic Fallback (§3.2).
+``baselines``   EvenSpread, RoundRobin, StaticMixture (ASG), AWSSpot,
+                MArk-like, OnDemandOnly, SpotOnly.
+``autoscaler``  The load-based autoscaler with hysteresis (§4).
+``omniscient``  The Omniscient ILP oracle (§3.3, Eq. 1-5) via HiGHS.
+"""
+
+from repro.core.autoscaler import Autoscaler, ConstantTarget, LoadAutoscaler
+from repro.core.baselines import (
+    AWSSpotPolicy,
+    EvenSpreadPolicy,
+    MArkLikePolicy,
+    OnDemandOnlyPolicy,
+    RoundRobinPolicy,
+    SpotOnlyPolicy,
+    StaticMixturePolicy,
+)
+from repro.core.omniscient import OmniscientPolicy, solve_omniscient
+from repro.core.policy import (
+    Action,
+    LaunchOnDemand,
+    LaunchSpot,
+    Observation,
+    Policy,
+    Terminate,
+    make_policy,
+)
+from repro.core.spothedge import SpotHedgePolicy
+
+__all__ = [
+    "Action",
+    "LaunchOnDemand",
+    "LaunchSpot",
+    "Observation",
+    "Policy",
+    "Terminate",
+    "make_policy",
+    "SpotHedgePolicy",
+    "EvenSpreadPolicy",
+    "RoundRobinPolicy",
+    "StaticMixturePolicy",
+    "AWSSpotPolicy",
+    "MArkLikePolicy",
+    "OnDemandOnlyPolicy",
+    "SpotOnlyPolicy",
+    "Autoscaler",
+    "ConstantTarget",
+    "LoadAutoscaler",
+    "OmniscientPolicy",
+    "solve_omniscient",
+]

@@ -1,0 +1,209 @@
+"""Policy interface shared by the simulator and the live service controller.
+
+The controller exposes the *observable* cluster state to the policy once per
+control interval; the policy returns a list of actions (launch spot in zone z,
+launch on-demand, terminate instance i).  Event hooks deliver preemption /
+ready / launch-failure transitions between ticks, which is what Alg. 1 keys
+off.  A policy never sees the future of the trace — only the Omniscient
+oracle (offline ILP) does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.cluster.catalog import Catalog, Zone
+    from repro.cluster.instance import Instance
+
+
+# ---------------------------------------------------------------------------
+# Actions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchSpot:
+    zone: str
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchOnDemand:
+    zone: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Terminate:
+    instance_id: int
+
+
+Action = object  # union of the three dataclasses above
+
+
+# ---------------------------------------------------------------------------
+# Observation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Observation:
+    """What the controller can see at time ``now`` (no future knowledge)."""
+
+    now: float
+    n_target: int                     # N_Tar(t) — from the autoscaler
+    spot_ready: List["Instance"]
+    spot_provisioning: List["Instance"]
+    od_ready: List["Instance"]
+    od_provisioning: List["Instance"]
+
+    # -- derived -----------------------------------------------------------
+    @property
+    def s_r(self) -> int:
+        """S_r(t): number of ready spot replicas."""
+        return len(self.spot_ready)
+
+    @property
+    def s_launched(self) -> int:
+        """S(t): launched (ready + provisioning) spot replicas."""
+        return len(self.spot_ready) + len(self.spot_provisioning)
+
+    @property
+    def o_r(self) -> int:
+        return len(self.od_ready)
+
+    @property
+    def o_launched(self) -> int:
+        return len(self.od_ready) + len(self.od_provisioning)
+
+    @property
+    def ready_total(self) -> int:
+        return self.s_r + self.o_r
+
+    def spot_count_by_zone(self) -> Dict[str, int]:
+        """Active (ready+provisioning) spot replicas per zone — the set C
+        that SELECT-NEXT-ZONE avoids re-using (Alg. 1 line 18)."""
+        counts: Dict[str, int] = {}
+        for inst in self.spot_ready + self.spot_provisioning:
+            counts[inst.zone] = counts.get(inst.zone, 0) + 1
+        return counts
+
+
+# ---------------------------------------------------------------------------
+# Policy base class
+# ---------------------------------------------------------------------------
+
+
+class Policy:
+    """Base class.  Subclasses implement ``decide`` and the event hooks."""
+
+    name: str = "policy"
+
+    #: after a failed spot launch, avoid retrying the same zone for this long
+    #: (real controllers back off; probing still happens — see SpotHedge).
+    launch_cooldown_s: float = 90.0
+
+    def __init__(self) -> None:
+        self._zones: List["Zone"] = []
+        self._catalog: Optional["Catalog"] = None
+        self._itype: str = ""
+        self._fail_at: Dict[str, float] = {}
+
+    # -- lifecycle -----------------------------------------------------
+    def reset(
+        self, zones: Sequence["Zone"], catalog: "Catalog", itype: str
+    ) -> None:
+        """Called once before the run with the *enabled* zone set (the user's
+        ``any_of`` filter from Listing 1 already applied)."""
+        self._zones = list(zones)
+        self._catalog = catalog
+        self._itype = itype
+        self._fail_at = {}
+
+    # -- event hooks (between control ticks) ----------------------------
+    def on_preemption(self, zone: str, now: float) -> None:
+        """A spot replica in ``zone`` was preempted."""
+
+    def on_launch_failure(self, zone: str, now: float) -> None:
+        """A spot launch in ``zone`` failed (no capacity)."""
+        self._fail_at[zone] = now
+
+    def _cooled(self, zone: str, now: float) -> bool:
+        """True if the zone is past its launch-failure cooldown."""
+        return now - self._fail_at.get(zone, -1e18) >= self.launch_cooldown_s
+
+    def on_ready(self, zone: str, now: float) -> None:
+        """A spot replica in ``zone`` finished cold start and is ready."""
+
+    def on_warning(self, zone: str, now: float) -> None:
+        """Best-effort preemption warning received for an instance in zone."""
+
+    # -- the decision --------------------------------------------------
+    def decide(self, obs: Observation) -> List[Action]:
+        raise NotImplementedError
+
+    # -- shared helpers ---------------------------------------------------
+    def _zone_names(self) -> List[str]:
+        return [z.name for z in self._zones]
+
+    def _spot_price(self, zone: str) -> float:
+        assert self._catalog is not None
+        return self._catalog.spot_price(self._itype, zone)
+
+    def _od_price(self, zone: str) -> float:
+        assert self._catalog is not None
+        return self._catalog.od_price(self._itype, zone)
+
+    def _cheapest_od_zone(self) -> str:
+        """On-demand fallback zone: cheapest enabled zone (OD is assumed
+        obtainable across regions — §5.1 Discussion)."""
+        return min(self._zone_names(), key=lambda z: (self._od_price(z), z))
+
+    @staticmethod
+    def _scale_down_od(
+        obs: Observation, od_needed: int
+    ) -> List[Action]:
+        """Terminate surplus on-demand replicas, provisioning-first (they
+        have served no traffic yet), then newest-ready-first."""
+        actions: List[Action] = []
+        surplus = obs.o_launched - od_needed
+        if surplus <= 0:
+            return actions
+        pool = sorted(
+            obs.od_provisioning, key=lambda i: -i.launched_at
+        ) + sorted(obs.od_ready, key=lambda i: -i.launched_at)
+        for inst in pool[:surplus]:
+            actions.append(Terminate(inst.id))
+        return actions
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register_policy(cls: type) -> type:
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def make_policy(name: str, **kwargs) -> Policy:
+    """Instantiate a policy by its registered name (CLI / config entry)."""
+    # Import for registration side effects.
+    from repro.core import baselines as _b  # noqa: F401
+    from repro.core import omniscient as _o  # noqa: F401
+    from repro.core import spothedge as _s  # noqa: F401
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown policy {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def registered_policies() -> List[str]:
+    from repro.core import baselines as _b  # noqa: F401
+    from repro.core import omniscient as _o  # noqa: F401
+    from repro.core import spothedge as _s  # noqa: F401
+
+    return sorted(_REGISTRY)

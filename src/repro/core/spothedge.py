@@ -1,0 +1,204 @@
+"""SpotHedge — the paper's policy (§3).
+
+Three mechanisms, composed:
+
+1. **Dynamic Placement (Alg. 1).**  Maintain ``Z_A`` (available zones) and
+   ``Z_P`` (highly-preempting zones).  A preemption or failed launch in ``z``
+   moves ``z → Z_P``; a successful ready launch moves ``z → Z_A``.  New spot
+   replicas are drawn from ``Z_A``, excluding zones that already host spot
+   replicas (the set ``C``) when possible, breaking ties by spot price.
+   When ``|Z_A| < 2`` the lists are rebalanced (``Z_A ← Z_A + Z_P``), which
+   prevents collapsing all placements onto one zone.
+
+2. **Overprovisioning (§3.2).**  Target ``N_Tar(t) + N_Extra`` *spot*
+   replicas.  The extra spot replicas are the cheap buffer that absorbs
+   preemptions while replacements (spot or on-demand) cold-start.
+
+3. **Dynamic Fallback (§3.2).**  Maintain
+   ``O(t) = min(N_Tar, N_Tar + N_Extra − S_r(t))`` launched on-demand
+   replicas.  On-demand replicas are scaled down as soon as enough spot
+   replicas are *ready* — on-demand is the fallback, never the steady state.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from repro.core.policy import (
+    Action,
+    LaunchOnDemand,
+    LaunchSpot,
+    Observation,
+    Policy,
+    Terminate,
+    register_policy,
+)
+
+
+@register_policy
+class SpotHedgePolicy(Policy):
+    """The full SpotHedge policy."""
+
+    name = "spothedge"
+
+    def __init__(
+        self,
+        num_overprovision: int = 2,
+        dynamic_ondemand_fallback: bool = True,
+        # optional static floor of on-demand capacity (custom policy, §4)
+        min_ondemand: int = 0,
+        # launch at most this many spot replicas per zone per tick, so a
+        # single tick cannot pile every replacement onto one zone
+        max_launch_per_zone_per_tick: int = 2,
+        # best-effort preemption warnings (§4 "Preemption handling"): treat
+        # ready replicas in recently-warned zones as at-risk when sizing the
+        # on-demand fallback.  0 disables.
+        warning_ttl_s: float = 240.0,
+    ) -> None:
+        super().__init__()
+        self.n_extra = int(num_overprovision)
+        self.dynamic_fallback = bool(dynamic_ondemand_fallback)
+        self.min_ondemand = int(min_ondemand)
+        self.max_launch_per_zone_per_tick = int(max_launch_per_zone_per_tick)
+        self.warning_ttl_s = float(warning_ttl_s)
+        self._za: List[str] = []
+        self._zp: List[str] = []
+        self._warned: Dict[str, float] = {}   # zone -> warning time
+
+    # ------------------------------------------------------------------
+    def reset(self, zones, catalog, itype) -> None:
+        super().reset(zones, catalog, itype)
+        self._za = [z.name for z in zones]    # line 1: Z_A <- Z
+        self._zp = []
+        self._warned = {}
+
+    # -- Alg. 1 event handlers -------------------------------------------
+    def _move_to_zp(self, zone: str) -> None:
+        if zone in self._za:
+            self._za.remove(zone)
+            self._zp.append(zone)
+        # line 7-9: rebalance when Z_A thins out
+        if len(self._za) < 2:
+            self._za = self._za + self._zp
+            self._zp = []
+
+    def on_preemption(self, zone: str, now: float) -> None:
+        # HANDLE-PREEMPTION(z)
+        self._move_to_zp(zone)
+
+    def on_launch_failure(self, zone: str, now: float) -> None:
+        # A failed launch is evidence the zone is out of capacity — the
+        # paper's Fig. 7 narrative moves zone 2 to Z_P on launch failure.
+        super().on_launch_failure(zone, now)
+        self._move_to_zp(zone)
+
+    def on_ready(self, zone: str, now: float) -> None:
+        # HANDLE-LAUNCH(z)
+        if zone in self._zp:
+            self._zp.remove(zone)
+            self._za.append(zone)
+
+    def on_warning(self, zone: str, now: float) -> None:
+        if self.warning_ttl_s > 0:
+            self._warned[zone] = now
+
+    # -- SELECT-NEXT-ZONE (Alg. 1, line 17-23) -----------------------------
+    def _select_next_zone(
+        self, current_counts: Dict[str, int], now: float
+    ) -> str:
+        active = [z for z in self._za if z in set(self._zone_names())]
+        if not active:
+            # All enabled zones in Z_P — rebalance defensively.
+            self._za = list(self._zone_names())
+            self._zp = []
+            active = list(self._za)
+        # honor launch-failure cooldowns unless that empties the pool
+        cooled = [z for z in active if self._cooled(z, now)]
+        if cooled:
+            active = cooled
+        occupied = {z for z, c in current_counts.items() if c > 0}
+        unoccupied = [z for z in active if z not in occupied]  # Z'_A = Z_A \ C
+        pool = unoccupied if unoccupied else active
+        # prioritize zones with fewer current spot placements, then price
+        return min(
+            pool,
+            key=lambda z: (current_counts.get(z, 0), self._spot_price(z), z),
+        )
+
+    # -- the decision ----------------------------------------------------
+    def decide(self, obs: Observation) -> List[Action]:
+        actions: List[Action] = []
+        n_tar = obs.n_target
+        spot_goal = n_tar + self.n_extra
+
+        # 1) keep trying to reach N_Tar + N_Extra *launched* spot replicas
+        counts = obs.spot_count_by_zone()
+        to_launch = spot_goal - obs.s_launched
+        # when every enabled zone recently failed, drop to a single probe
+        # launch per tick ("the policy can additionally probe different
+        # zones to maintain Z_P and Z_A" — §3.1)
+        if to_launch > 1 and not any(
+            self._cooled(z, obs.now) for z in self._zone_names()
+        ):
+            to_launch = 1
+        launched_this_tick: Dict[str, int] = {}
+        for _ in range(max(0, to_launch)):
+            zone = self._select_next_zone(counts, obs.now)
+            if (
+                launched_this_tick.get(zone, 0)
+                >= self.max_launch_per_zone_per_tick
+                and len(self._za) > 1
+            ):
+                # spread replacements across remaining zones within a tick
+                alt = dict(counts)
+                alt[zone] = alt.get(zone, 0) + 10_000  # de-prioritize
+                zone = self._select_next_zone(alt, obs.now)
+            actions.append(LaunchSpot(zone))
+            counts[zone] = counts.get(zone, 0) + 1
+            launched_this_tick[zone] = launched_this_tick.get(zone, 0) + 1
+
+        # 2) scale down surplus spot (target shrank): newest-first,
+        #    provisioning-first
+        if to_launch < 0:
+            surplus = -to_launch
+            pool = sorted(
+                obs.spot_provisioning, key=lambda i: -i.launched_at
+            ) + sorted(obs.spot_ready, key=lambda i: -i.launched_at)
+            for inst in pool[:surplus]:
+                actions.append(Terminate(inst.id))
+
+        # 3) Dynamic Fallback: O(t) = min(N_Tar, N_Tar + N_Extra - S_r)
+        #    Ready replicas in recently-warned zones are discounted from S_r
+        #    (the §4 warning extension) so the fallback launches *before*
+        #    the preemption lands, shaving one cold start from the outage.
+        self._warned = {
+            z: t0
+            for z, t0 in self._warned.items()
+            if obs.now - t0 <= self.warning_ttl_s
+        }
+        at_risk = sum(
+            1 for inst in obs.spot_ready if inst.zone in self._warned
+        )
+        s_r_eff = obs.s_r - at_risk
+        if self.dynamic_fallback:
+            od_needed = min(n_tar, n_tar + self.n_extra - s_r_eff)
+            od_needed = max(od_needed, self.min_ondemand, 0)
+        else:
+            od_needed = self.min_ondemand
+        gap = od_needed - obs.o_launched
+        if gap > 0:
+            zone = self._cheapest_od_zone()
+            for _ in range(gap):
+                actions.append(LaunchOnDemand(zone))
+        elif gap < 0:
+            actions.extend(self._scale_down_od(obs, od_needed))
+        return actions
+
+    # -- introspection (used by tests + dashboards) ------------------------
+    @property
+    def available_zones(self) -> List[str]:
+        return list(self._za)
+
+    @property
+    def preempting_zones(self) -> List[str]:
+        return list(self._zp)

@@ -1,0 +1,18 @@
+"""Distribution: sharding rules, checkpointing, ZeRO-1, elastic re-mesh,
+gradient compression."""
+
+from repro.distributed.sharding import (
+    RULESETS,
+    logical_to_pspec,
+    make_rules,
+    param_shardings,
+    shard_pytree_specs,
+)
+
+__all__ = [
+    "RULESETS",
+    "logical_to_pspec",
+    "make_rules",
+    "param_shardings",
+    "shard_pytree_specs",
+]

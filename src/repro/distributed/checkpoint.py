@@ -1,0 +1,154 @@
+"""Sharded checkpoint save/restore with atomic manifests.
+
+Layout:
+
+    <dir>/step_000100/
+        manifest.json        # pytree structure, shapes, dtypes, paths
+        leaf_00000.npy ...   # one file per leaf (host-local shard gather)
+    <dir>/step_000100.tmp/   # written first, atomically renamed
+
+Restart semantics (fault tolerance): ``latest_step`` scans for the highest
+*complete* checkpoint (manifest present = rename completed); partially
+written ``.tmp`` dirs from a preempted writer are ignored and garbage-
+collected on the next save.  ``restore`` re-shards onto whatever mesh the
+restarted job runs with (elastic restart after capacity loss — see
+``elastic.py``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes  # registers bfloat16/f8 with numpy's dtype system
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    params: Any,
+    opt_state: Optional[Any] = None,
+    *,
+    extra: Optional[Dict[str, Any]] = None,
+    keep: int = 3,
+) -> str:
+    """Write params (+opt state) atomically; prune old checkpoints."""
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:08d}"
+    final = os.path.join(directory, name)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    tree = {"params": params}
+    if opt_state is not None:
+        tree["opt_state"] = opt_state
+    flat, _ = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    for i, (key, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        # exotic dtypes (bfloat16, float8_*) round-trip as raw bytes; the
+        # true dtype lives in the manifest
+        np.save(
+            os.path.join(tmp, fname),
+            np.frombuffer(np.ascontiguousarray(arr).tobytes(), np.uint8),
+        )
+        manifest["leaves"].append(
+            {"key": key, "file": fname, "shape": list(arr.shape),
+             "dtype": str(arr.dtype)}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)           # atomic commit
+
+    # prune
+    ckpts = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for old in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(directory, old), ignore_errors=True)
+    # gc any stale tmp dirs from preempted writers
+    for d in os.listdir(directory):
+        if d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for d in os.listdir(directory):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, d, "manifest.json")):
+                steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    template: Any,
+    *,
+    step: Optional[int] = None,
+    shardings: Optional[Any] = None,
+) -> Tuple[Any, int]:
+    """Restore into the structure of ``template`` ({"params":..,
+    "opt_state":..?}); optionally placing leaves with ``shardings``
+    (a matching pytree of NamedSharding) for elastic restarts."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat_t, treedef = _flatten_with_paths(template)
+    by_key = {e["key"]: e for e in manifest["leaves"]}
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = [s for _, s in _flatten_with_paths(shardings)[0]]
+
+    leaves = []
+    for i, (key, leaf_t) in enumerate(flat_t):
+        entry = by_key.get(key)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        raw = np.load(os.path.join(path, entry["file"]))
+        arr = np.frombuffer(
+            raw.tobytes(), dtype=np.dtype(entry["dtype"])
+        ).reshape(entry["shape"])
+        expected = tuple(np.shape(leaf_t)) if hasattr(leaf_t, "shape") \
+            else tuple(leaf_t.shape)
+        if tuple(arr.shape) != tuple(expected):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs template "
+                f"{expected}"
+            )
+        if shard_flat is not None:
+            leaves.append(jax.device_put(arr, shard_flat[i]))
+        else:
+            leaves.append(jnp.asarray(arr))
+    restored = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves
+    )
+    return restored, step

@@ -1,0 +1,97 @@
+"""Elastic re-mesh: continue after losing (or gaining) capacity.
+
+The SpotHedge failure unit is a whole replica (= one pod slice), but a
+production fleet also wants *training* jobs to survive losing part of the
+data-parallel axis: checkpoint, rebuild a smaller mesh, re-shard, resume.
+``plan_remesh`` computes the new mesh shape from surviving chip count;
+``reshard`` moves a pytree onto the new shardings (device_put handles the
+all-gather/redistribute); the launch layer re-lowers the train step for the
+new mesh (proved by the dry-run at both 256- and 512-chip meshes).
+
+Policy: shrink the ``data`` axis first (gradient math is invariant to DP
+size modulo batch), never the ``model`` axis (TP degree is baked into the
+layer math only through divisibility, but re-sharding TP mid-run changes
+per-chip layouts and is where SpotServe-style re-parallelization applies —
+the TPU-idiomatic analogue is re-lowering with the new mesh, which the
+dry-run exercises).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import param_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    dropped_chips: int
+
+    @property
+    def new_chip_count(self) -> int:
+        n = 1
+        for s in self.new_shape:
+            n *= s
+        return n
+
+
+def plan_remesh(
+    mesh: Mesh,
+    surviving_chips: int,
+    *,
+    shrink_axis: str = "data",
+) -> RemeshPlan:
+    """Largest mesh of the same axis structure that fits the survivors,
+    shrinking only ``shrink_axis`` (power-of-two steps)."""
+    names = tuple(mesh.axis_names)
+    shape = tuple(mesh.shape[a] for a in names)
+    if shrink_axis not in names:
+        raise ValueError(f"mesh has no axis {shrink_axis!r}")
+    idx = names.index(shrink_axis)
+    other = 1
+    for i, s in enumerate(shape):
+        if i != idx:
+            other *= s
+    new_dim = shape[idx]
+    while new_dim > 1 and other * new_dim > surviving_chips:
+        new_dim //= 2
+    if other * new_dim > surviving_chips:
+        raise ValueError(
+            f"cannot fit mesh {shape} into {surviving_chips} chips by "
+            f"shrinking {shrink_axis!r} alone"
+        )
+    new_shape = tuple(
+        new_dim if i == idx else s for i, s in enumerate(shape)
+    )
+    return RemeshPlan(
+        old_shape=shape,
+        new_shape=new_shape,
+        axis_names=names,
+        dropped_chips=int(jax.numpy.prod(jax.numpy.array(shape)))
+        - other * new_dim,
+    )
+
+
+def build_mesh(plan: RemeshPlan) -> Mesh:
+    return jax.make_mesh(plan.new_shape, plan.axis_names)
+
+
+def reshard(
+    tree: Any,
+    logical_tree: Any,
+    abstract_tree: Any,
+    new_mesh: Mesh,
+    rules: Any,
+) -> Any:
+    """device_put a pytree onto shardings derived for the new mesh."""
+    shardings = param_shardings(logical_tree, abstract_tree, new_mesh, rules)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), tree, shardings
+    )

@@ -1,0 +1,190 @@
+"""Sharding: logical axes -> mesh axes, with divisibility-aware fallback.
+
+The model zoo annotates every parameter and activation with *logical* axis
+names (``repro.models.base``).  This module maps them onto the production
+mesh (``pod``, ``data``, ``model``) through named rule tables:
+
+* ``tp``        Megatron-style tensor parallelism inside a replica:
+                heads / mlp / experts / vocab over ``model``; batch over
+                (``pod``, ``data``); ZeRO-1 shards optimizer state over
+                ``data``.
+* ``tp_sp``     tp + sequence-parallel residual stream (activations' seq
+                axis over ``model`` between blocks).
+* ``decode_cp`` decode-time context parallelism: the KV-cache *sequence*
+                axis is sharded over ``model`` (works for every kv_heads
+                count, incl. paligemma's kv=1) and batch over ``data``.
+
+A rule is dropped per-tensor-dimension when the dimension size does not
+divide the mesh axis (e.g. paligemma's 8 heads on a 16-way ``model`` axis
+fall back to replicated weights while its attention still context-
+parallelizes).  This fallback is logged once per (axis, size) pair.
+"""
+
+from __future__ import annotations
+
+import logging
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+logger = logging.getLogger(__name__)
+
+# rule: logical axis name -> mesh axis name (or tuple of mesh axes) or None
+Rules = Mapping[str, Any]
+
+_TP_RULES: Dict[str, Any] = {
+    # weights
+    "embed": None,               # residual dim replicated (activations SP'd)
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "layers": None,
+    "experts": "model",          # EP: experts over the TP axis
+    "expert_mlp": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "act_embed": None,
+    # optimizer state (ZeRO-1): leading param axis over data — handled in
+    # training/optimizer.py via these names
+    "zero": "data",
+}
+
+_TP_SP_RULES = dict(_TP_RULES)
+_TP_SP_RULES.update({
+    "seq": "model",              # sequence-parallel residual stream
+})
+
+_DECODE_CP_RULES = dict(_TP_RULES)
+_DECODE_CP_RULES.update({
+    "kv_seq": "model",           # context-parallel KV cache
+    "kv_heads": None,            # seq takes the axis; heads replicated
+    "heads": None,               # (mamba2 hybrid decode state heads too)
+    "batch": ("pod", "data"),
+})
+
+RULESETS: Dict[str, Dict[str, Any]] = {
+    "tp": _TP_RULES,
+    "tp_sp": _TP_SP_RULES,
+    "decode_cp": _DECODE_CP_RULES,
+}
+
+
+def make_rules(name: str, overrides: Optional[Rules] = None) -> Dict[str, Any]:
+    rules = dict(RULESETS[name])
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _present(mesh: Mesh, axis: Any) -> Any:
+    """Drop mesh axes the mesh doesn't have (e.g. 'pod' on single-pod)."""
+    if axis is None:
+        return None
+    if isinstance(axis, (tuple, list)):
+        kept = tuple(a for a in axis if a in mesh.axis_names)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+    return axis if axis in mesh.axis_names else None
+
+
+def _mesh_axis_size(mesh: Mesh, axis: Any) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+_warned: set = set()
+
+
+def logical_to_pspec(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Rules,
+) -> P:
+    """Build a PartitionSpec for one tensor, dropping non-dividing axes."""
+    spec: List[Any] = []
+    for dim, name in zip(shape, logical):
+        axis = rules.get(name) if name is not None else None
+        axis = _present(mesh, axis)
+        if axis is not None:
+            n = _mesh_axis_size(mesh, axis)
+            if dim % n != 0:
+                key = (name, axis if not isinstance(axis, list) else
+                       tuple(axis), dim, n)
+                if key not in _warned:
+                    _warned.add(key)
+                    logger.info(
+                        "sharding fallback: logical axis %r (dim %d) does "
+                        "not divide mesh axis %r (size %d); replicating",
+                        name, dim, axis, n,
+                    )
+                axis = None
+        spec.append(tuple(axis) if isinstance(axis, list) else axis)
+    # trim trailing Nones for tidiness
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def shard_pytree_specs(
+    logical_tree: Any,
+    abstract_tree: Any,
+    mesh: Mesh,
+    rules: Rules,
+) -> Any:
+    """PartitionSpec pytree for (logical axes, shapes) trees."""
+    return jax.tree_util.tree_map(
+        lambda logical, ab: logical_to_pspec(logical, ab.shape, mesh, rules),
+        logical_tree,
+        abstract_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def param_shardings(
+    logical_tree: Any,
+    abstract_tree: Any,
+    mesh: Mesh,
+    rules: Rules,
+) -> Any:
+    """NamedSharding pytree (jit in_shardings for parameters)."""
+    specs = shard_pytree_specs(logical_tree, abstract_tree, mesh, rules)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation constraint helper (used inside model step functions when a mesh
+# is active).  No-op outside a mesh context.
+# ---------------------------------------------------------------------------
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via logical activation axes, best-effort."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:  # pragma: no cover
+            return x
+    except Exception:  # pragma: no cover - older jax
+        return x
+    rules = RULESETS["tp"]
+    spec = logical_to_pspec(list(axes), x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the data-plane hot spots.
+
+Each kernel ships three artifacts:
+
+* ``<name>.py``  — the ``pl.pallas_call`` + explicit BlockSpec VMEM tiling,
+* ``ops.py``     — jit'd wrappers with model-layout transforms and the
+                   ``interpret`` switch (True on CPU: the kernel body runs
+                   in Python for correctness validation),
+* ``ref.py``     — pure-jnp oracles the tests ``assert_allclose`` against.
+
+Kernels:
+
+* ``flash_attention``  — prefill attention (online softmax, causal /
+  sliding-window block skipping, GQA via index_map head folding).
+* ``flash_decode``     — one-query-token attention vs. a long KV cache,
+  blocked over KV with running max/denominator.
+* ``selective_scan``   — Mamba-1 within-chunk recurrence h' = a·h + b.
+* ``moe_gmm``          — grouped (per-expert) matmul for MoE FFNs.
+
+TPU tiling notes: MXU wants the two minor dims in multiples of (8, 128)
+for fp32 / (16, 128) for bf16; all BlockSpecs here keep the last dim a
+multiple of 128 and the second-minor a multiple of the sublane count.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,192 @@
+"""Flash attention (prefill) Pallas TPU kernel.
+
+Layout: q (B, H, Sq, D), k/v (B, Kv, Skv, D), out (B, H, Sq, D).
+
+Grid: (B, H, nQ, nKV) with dimension semantics (parallel, parallel,
+parallel, arbitrary) — the trailing KV axis is the sequential reduction:
+running max ``m``, denominator ``l`` and the fp32 accumulator live in VMEM
+scratch across KV iterations; the output block is written on the last one.
+
+Causal / sliding-window block skipping happens at *block* granularity via
+``pl.when`` — fully-masked (q_blk, kv_blk) pairs issue no MXU work, which
+is what cuts the 2× causal waste of the jnp blockwise path on TPU.
+
+GQA is folded into the index_map: kv block index = h // (H // Kv).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref,             # VMEM blocks
+    o_ref,                            # output block
+    m_scr, l_scr, acc_scr,            # scratch (VMEM)
+    *,
+    scale: float,
+    block_q: int,
+    block_kv: int,
+    n_kv: int,
+    causal: bool,
+    window: Optional[int],
+    prefix_len: int,
+    seq_q: int,
+    seq_kv: int,
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = kj * block_kv
+
+    # block-level skip decision (static per (qi,kj) pair at trace time is
+    # not possible — grid indices are dynamic — so use pl.when)
+    live = jnp.asarray(True)
+    if causal:
+        # fully masked above the diagonal: first q pos < first kv pos
+        live = jnp.logical_and(
+            live, q_start + block_q - 1 >= k_start
+        )
+    if window is not None:
+        # fully outside the window: last q pos - first kv pos >= window
+        live = jnp.logical_and(
+            live, q_start - (k_start + block_kv - 1) < window
+        )
+    if prefix_len > 0:
+        # prefix zone is always live
+        live = jnp.logical_or(live, k_start < prefix_len)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bkv, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                     # (bq, bkv)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0
+        )
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1
+        )
+        mask = k_pos < seq_kv                          # kv padding
+        mask = jnp.logical_and(mask, q_pos < seq_q)
+        if causal:
+            c = q_pos >= k_pos
+            if prefix_len > 0:
+                c = jnp.logical_or(c, k_pos < prefix_len)
+            mask = jnp.logical_and(mask, c)
+        if window is not None:
+            mask = jnp.logical_and(mask, q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # (bq,)
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_prev * corr + p.sum(axis=-1)
+        m_scr[...] = m_new
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(
+    q: jax.Array,                     # (B, H, Sq, D)
+    k: jax.Array,                     # (B, Kv, Skv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    Kv, Skv = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = 1.0 / math.sqrt(D)
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    pad_q = (-Sq) % block_q
+    pad_kv = (-Skv) % block_kv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    nq = (Sq + pad_q) // block_q
+    nkv = (Skv + pad_kv) // block_kv
+
+    kernel = functools.partial(
+        _kernel,
+        scale=scale,
+        block_q=block_q,
+        block_kv=block_kv,
+        n_kv=nkv,
+        causal=causal,
+        window=window,
+        prefix_len=prefix_len,
+        seq_q=Sq,
+        seq_kv=Skv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_kv, D),
+                lambda b, h, i, j, G=G: (b, h // G, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_kv, D),
+                lambda b, h, i, j, G=G: (b, h // G, j, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq + pad_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq]

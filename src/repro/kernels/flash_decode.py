@@ -1,0 +1,124 @@
+"""Flash decode Pallas TPU kernel: one query token vs. a long KV cache.
+
+Layout: q (B, H, D), k/v (B, Kv, S, D), valid (B, S) int8, out (B, H, D).
+
+Grid: (B, H, nKV) — the KV axis is the sequential reduction with running
+max / denominator in VMEM scratch (split-K style flash decoding).  The
+validity mask (cache occupancy, ring-buffer slots) rides along as a blocked
+int8 input, so arbitrary cache lengths need no recompile.
+
+Decode attention is HBM-bandwidth-bound (read the whole KV cache once per
+token); the kernel's job is to keep the reads streaming at full ``(8,128)``
+tile efficiency with zero intermediate HBM traffic.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, valid_ref,
+    o_ref,
+    m_scr, l_scr, acc_scr,
+    *,
+    scale: float,
+    n_kv: int,
+):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                # (1, D) row block
+    k = k_ref[0, 0].astype(jnp.float32)             # (bkv, D)
+    v = v_ref[0, 0].astype(jnp.float32)
+    valid = valid_ref[0] != 0                        # (bkv,)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[0] * scale                                     # (bkv,)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[0]
+    l_prev = l_scr[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[0] = l_prev * corr + p.sum()
+    m_scr[0] = m_new
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p[None, :], v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[0], 1e-20)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)   # (1, D)
+
+
+def flash_decode_bhd(
+    q: jax.Array,                 # (B, H, D)
+    k: jax.Array,                 # (B, Kv, S, D)
+    v: jax.Array,
+    valid: jax.Array,             # (B, S) int8/bool
+    *,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, D = q.shape
+    Kv, S = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = 1.0 / math.sqrt(D)
+
+    block_kv = min(block_kv, S)
+    pad = (-S) % block_kv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    nkv = (S + pad) // block_kv
+    valid = valid.astype(jnp.int8)
+
+    kernel = functools.partial(_kernel, scale=scale, n_kv=nkv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, D), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec(
+                (1, 1, block_kv, D),
+                lambda b, h, j, G=G: (b, h // G, j, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_kv, D),
+                lambda b, h, j, G=G: (b, h // G, j, 0),
+            ),
+            pl.BlockSpec((1, block_kv), lambda b, h, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v, valid)
+    return out

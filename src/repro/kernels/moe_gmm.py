@@ -1,0 +1,92 @@
+"""MoE grouped matmul Pallas TPU kernel.
+
+Computes y[e] = x[e] @ w[e] for every expert e: x (E, C, D), w (E, D, F),
+y (E, C, F).  Grid (E, C/bc, F/bf, D/bd) with an fp32 VMEM accumulator over
+the contraction blocks — per-expert tiles stream through the MXU without
+materializing any (C, D) × (D, F) intermediate in HBM.
+
+Block shapes are MXU-aligned (multiples of 128 on the minor dims); the
+capacity dim C comes from the router (ops.py pads it to the sublane
+multiple)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_scr, *, n_d: int):
+    dj = pl.program_id(3)
+
+    @pl.when(dj == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0].astype(jnp.float32)          # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)          # (bd, bf)
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(dj == n_d - 1)
+    def _finish():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def moe_gmm_ecf(
+    x: jax.Array,                 # (E, C, D)
+    w: jax.Array,                 # (E, D, F)
+    *,
+    block_c: int = 128,
+    block_d: int = 512,
+    block_f: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    E, C, D = x.shape
+    F = w.shape[2]
+    block_c = min(block_c, C)
+    block_d = min(block_d, D)
+    block_f = min(block_f, F)
+
+    pad_c = (-C) % block_c
+    pad_d = (-D) % block_d
+    pad_f = (-F) % block_f
+    if pad_c or pad_d:
+        x = jnp.pad(x, ((0, 0), (0, pad_c), (0, pad_d)))
+    if pad_d or pad_f:
+        w = jnp.pad(w, ((0, 0), (0, pad_d), (0, pad_f)))
+    nc = (C + pad_c) // block_c
+    nd = (D + pad_d) // block_d
+    nf = (F + pad_f) // block_f
+
+    kernel = functools.partial(_kernel, n_d=nd)
+    out = pl.pallas_call(
+        kernel,
+        grid=(E, nc, nf, nd),
+        in_specs=[
+            pl.BlockSpec(
+                (1, block_c, block_d), lambda e, c, f, d: (e, c, d)
+            ),
+            pl.BlockSpec(
+                (1, block_d, block_f), lambda e, c, f, d: (e, d, f)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_c, block_f), lambda e, c, f, d: (e, c, f)
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (E, C + pad_c, F + pad_f), x.dtype
+        ),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, w)
+    return out[:, :C, :F]

@@ -1,0 +1,134 @@
+"""jit'd wrappers over the Pallas kernels, in model layouts.
+
+``interpret`` defaults to True off-TPU (the kernel body executes in Python
+on CPU for correctness); on TPU backends the compiled kernels run.  Model
+code calls these through ``impl="pallas"``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_decode import flash_decode_bhd
+from repro.kernels.moe_gmm import moe_gmm_ecf
+from repro.kernels.selective_scan import selective_scan_bqcn
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "prefix_len", "block_q",
+                     "block_kv", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,                 # model layout (B, S, H, D)
+    k: jax.Array,                 # (B, S, Kv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _default_interpret()
+    out = flash_attention_bhsd(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal,
+        window=window,
+        prefix_len=prefix_len,
+        block_q=block_q,
+        block_kv=block_kv,
+        interpret=interpret,
+    )
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_kv", "interpret")
+)
+def flash_decode(
+    q: jax.Array,                 # (B, 1, H, D) model layout
+    k_cache: jax.Array,           # (B, S, Kv, D)
+    v_cache: jax.Array,
+    *,
+    kv_valid: jax.Array,          # (B, S)
+    block_kv: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _default_interpret()
+    out = flash_decode_bhd(
+        q[:, 0],
+        k_cache.transpose(0, 2, 1, 3),
+        v_cache.transpose(0, 2, 1, 3),
+        kv_valid,
+        block_kv=block_kv,
+        interpret=interpret,
+    )
+    return out[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "interpret")
+)
+def selective_scan(
+    a: jax.Array,                 # (B, Q, C, N)
+    b: jax.Array,
+    h0: jax.Array,                # (B, C, N)
+    *,
+    block_c: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _default_interpret()
+    C = a.shape[2]
+    bc = block_c
+    while C % bc:
+        bc //= 2
+    return selective_scan_bqcn(
+        a, b, h0, block_c=max(bc, 1), interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def moe_gmm(
+    x: jax.Array,                 # (E, C, D)
+    w: jax.Array,                 # (E, D, F)
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _default_interpret()
+    return moe_gmm_ecf(x, w, interpret=interpret)
+
+
+def moe_ffn(
+    xe: jax.Array,                # (E, C, D)
+    wi: jax.Array,                # (E, D, F)
+    wg: Optional[jax.Array],
+    wo: jax.Array,                # (E, F, D)
+    *,
+    act: str = "silu",
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Full expert FFN via the grouped-matmul kernel."""
+    h = moe_gmm(xe, wi, interpret=interpret)
+    a = jax.nn.silu if act == "silu" else jax.nn.gelu
+    if wg is not None:
+        h = a(moe_gmm(xe, wg, interpret=interpret)) * h
+    else:
+        h = a(h)
+    return moe_gmm(h, wo, interpret=interpret)

@@ -1,0 +1,73 @@
+"""Selective-scan Pallas TPU kernel (Mamba-1 within-chunk recurrence).
+
+Computes h_t = a_t * h_{t-1} + b_t for a chunk, returning every h_t.
+
+Layout: a/b (B, Q, C, N), h0 (B, C, N), out (B, Q, C, N) where C is a
+``d_inner`` block and N the SSM state size (16 for falcon-mamba — padded to
+a lane-friendly 128 multiple by ops.py when worthwhile; the (C, N) plane is
+the VREG tile).
+
+Grid: (B, n_channel_blocks).  Each kernel instance keeps the running state
+``h`` in VMEM scratch and walks the chunk with ``fori_loop`` — the
+recurrence is sequential in time but the (C, N) plane is vector-parallel,
+which is the TPU-native shape of this computation (the GPU version's
+warp-parallel scan over time does not transfer; DESIGN.md §Hardware
+adaptation)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, h0_ref, o_ref, h_scr, *, chunk: int):
+    h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    def step(t, _):
+        a_t = a_ref[0, t].astype(jnp.float32)      # (C, N)
+        b_t = b_ref[0, t].astype(jnp.float32)
+        h = a_t * h_scr[...] + b_t
+        h_scr[...] = h
+        o_ref[0, t] = h.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+
+def selective_scan_bqcn(
+    a: jax.Array,                 # (B, Q, C, N)
+    b: jax.Array,                 # (B, Q, C, N)
+    h0: jax.Array,                # (B, C, N)
+    *,
+    block_c: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Q, C, N = a.shape
+    block_c = min(block_c, C)
+    assert C % block_c == 0, (C, block_c)
+    nc = C // block_c
+
+    kernel = functools.partial(_kernel, chunk=Q)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, block_c, N), lambda b_, c: (b_, 0, c, 0)),
+            pl.BlockSpec((1, Q, block_c, N), lambda b_, c: (b_, 0, c, 0)),
+            pl.BlockSpec((1, block_c, N), lambda b_, c: (b_, c, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, Q, block_c, N), lambda b_, c: (b_, 0, c, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Q, C, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_c, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(a, b, h0)
+    return out

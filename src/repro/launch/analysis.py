@@ -1,0 +1,271 @@
+"""Compiled-artifact analysis: cost model, collective bytes, roofline terms.
+
+``cost_analysis()`` gives HLO FLOPs and bytes accessed; collective traffic
+is NOT in cost_analysis, so we parse the optimized HLO text and sum the
+shapes flowing through every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+
+Roofline terms (per chip, TPU v5e):
+
+    compute    = HLO_FLOPs   / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes   / (chips × 819e9 B/s HBM)
+    collective = link_bytes  / (chips × 50e9 B/s ICI)
+
+``link_bytes`` applies a per-op traffic model (ring collectives):
+all-reduce 2×(n−1)/n ≈ 2×, all-gather / reduce-scatter / all-to-all
+(n−1)/n ≈ 1×, collective-permute 1× of the tensor size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'dtype[1,2,3]' shape token; 0 if unparsable."""
+    m = _SHAPE_RE.match(shape_str.strip().strip("(").strip())
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    b = _DTYPE_BYTES.get(dt)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]      # raw tensor bytes per op kind
+    link_bytes: float                  # traffic-model bytes over links
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts: Dict[str, int] = {}
+    by_kind: Dict[str, int] = {}
+    link = 0.0
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes_str, kind = m.groups()
+        # async pairs: count the -start, skip the matching -done
+        if f"{kind}-done" in line:
+            continue
+        # tuple results "(f32[8], f32[8])": sum all member shapes
+        nbytes = 0
+        for tok in re.findall(r"\w+\[[\d,]*\]", shapes_str):
+            nbytes += _shape_bytes(tok)
+        if nbytes == 0:
+            # fall back: first shape anywhere in the line
+            m2 = re.search(r"\w+\[[\d,]*\]", line)
+            if m2:
+                nbytes = _shape_bytes(m2.group(0))
+        counts[kind] = counts.get(kind, 0) + 1
+        by_kind[kind] = by_kind.get(kind, 0) + nbytes
+        link += _COLLECTIVE_FACTOR[kind] * nbytes
+    return CollectiveStats(counts=counts, bytes_by_kind=by_kind,
+                           link_bytes=link)
+
+
+# ---------------------------------------------------------------------------
+# While-loop (scan) trip-count multiplication
+# ---------------------------------------------------------------------------
+# cost_analysis on a lowered module counts a while body ONCE; the layer scan
+# makes this badly wrong.  jax's compiled.cost_analysis() (XLA's HloCostAnalysis
+# on the optimized module) DOES account for known trip counts on TPU, but the
+# CPU backend leaves some loops opaque.  We therefore also scale parsed
+# collective bytes by the trip count of the loop they appear in.
+
+_TRIP_RE = re.compile(r"trip_count=(\d+)")
+
+
+def scale_collectives_by_loops(hlo_text: str) -> float:
+    """Best-effort multiplier map: returns total link bytes with while-loop
+    bodies multiplied by their known trip counts."""
+    # Split the module into computations; find while loops with known trip
+    # counts and which computation they call.
+    comp_bodies: Dict[str, str] = {}
+    current = None
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = re.match(r"\s*%?([\w\.\-]+)\s*\([^)]*\)\s*->", ln)
+        if ln.startswith("ENTRY") or (m and "{" in ln):
+            name = ln.split("(")[0].strip().lstrip("%").split()[-1] \
+                if not ln.startswith("ENTRY") else "ENTRY"
+            current = name
+            comp_bodies[current] = ""
+        elif current is not None:
+            comp_bodies[current] = comp_bodies[current] + ln + "\n"
+
+    # map body computation -> trip count
+    trips: Dict[str, int] = {}
+    for ln in lines:
+        if " while(" in ln and "body=" in ln:
+            mb = re.search(r"body=%?([\w\.\-]+)", ln)
+            mt = _TRIP_RE.search(ln)
+            if mb:
+                trips[mb.group(1)] = int(mt.group(1)) if mt else 1
+
+    total = 0.0
+    for name, body in comp_bodies.items():
+        stats = parse_collectives(body)
+        total += stats.link_bytes * trips.get(name, 1)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Roofline terms.
+
+    IMPORTANT semantics: ``compiled.cost_analysis()`` and the optimized HLO
+    text both describe the *per-device* (post-SPMD-partitioning) module, so
+    ``hlo_flops`` / ``hlo_bytes`` / ``collective_link_bytes`` are per-chip
+    quantities and the terms below divide by single-chip peaks.
+    ``model_flops`` is the *global* 6·N·D (train) / 2·N·D (inference)
+    figure; the useful-fraction therefore divides by (hlo_flops × chips).
+    """
+
+    arch: str
+    shape: str
+    mesh_desc: str
+    chips: int
+    hlo_flops: float                    # per-device
+    hlo_bytes: float                    # per-device
+    collective_link_bytes: float        # per-device
+    model_flops: float                  # GLOBAL 6·N·D / 6·N_active·D (MoE)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_link_bytes / ICI_BW_PER_LINK
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips) — catches remat/redundancy."""
+        if self.hlo_flops <= 0:
+            return 0.0
+        return self.model_flops / (self.hlo_flops * self.chips)
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs utilization at the roofline step time (global model
+        FLOPs over all chips running for the roofline step time)."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (t * self.chips * PEAK_FLOPS_BF16)
+
+    def row(self) -> Dict[str, Any]:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh_desc,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_link_bytes": self.collective_link_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu_at_roofline": self.mfu,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference (per step:
+    D = tokens processed).  MoE uses active params; frontend stub tokens
+    count as processed tokens."""
+    from repro.models import build_model, param_count
+
+    n_total = param_count(build_model(cfg).blueprint())
+    n = n_total
+    if cfg.is_moe:
+        # active params: replace full expert count with top-k experts
+        expert_params = (
+            cfg.num_layers
+            * cfg.num_experts
+            * (3 if cfg.mlp_gated else 2)
+            * cfg.d_model
+            * cfg.expert_d_ff
+        )
+        active_expert = expert_params * (
+            cfg.experts_per_token / cfg.num_experts
+        )
+        n = n_total - expert_params + active_expert
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * (
+            shape.seq_len + (cfg.frontend_seq or 0)
+        )
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes and record memory/cost/collective analysis.
+
+MUST be run as a module/script (the two lines above run before any jax
+import — jax locks the device count at first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape decode_32k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Artifacts land in ``artifacts/dryrun/<arch>__<shape>__<mesh>.json`` and are
+consumed by ``benchmarks/roofline.py`` and EXPERIMENTS.md §Dry-run.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, cells_for, get_config
+from repro.launch.analysis import Roofline, model_flops_for
+from repro.launch.hlo_count import analyze_hlo
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch.steps import build_step
+
+ARTIFACT_DIR = os.path.join("artifacts", "dryrun")
+
+
+def _mesh_desc(mesh) -> str:
+    return "x".join(str(mesh.shape[a]) for a in mesh.axis_names) + ":" + \
+        ",".join(mesh.axis_names)
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool,
+    verbose: bool = True,
+    step_kwargs: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Lower + compile one cell; return the analysis record."""
+    cfg = get_config(arch)
+    status = dict(cells_for(cfg)).get(shape_name, "run")
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    record: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "mesh_desc": _mesh_desc(mesh),
+        "chips": mesh_chip_count(mesh),
+        "status": status,
+    }
+    if status != "run":
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: {status}")
+        return record
+
+    t0 = time.time()
+    built = build_step(arch, shape_name, mesh, **(step_kwargs or {}))
+    with mesh:
+        lowered = built.jitted().lower(*built.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0] if cost else {}
+    hlo = compiled.as_text()
+    # loop-aware per-device counts (XLA:CPU cost_analysis counts while
+    # bodies once — verified; analyze_hlo scales by known trip counts)
+    counts = analyze_hlo(hlo)
+    flops = counts.flops
+    bytes_accessed = counts.bytes
+    link_bytes = counts.coll_bytes
+
+    shape = SHAPES[shape_name]
+    roof = Roofline(
+        arch=arch,
+        shape=shape_name,
+        mesh_desc=record["mesh_desc"],
+        chips=record["chips"],
+        hlo_flops=flops,
+        hlo_bytes=bytes_accessed,
+        collective_link_bytes=link_bytes,
+        model_flops=model_flops_for(cfg, shape),
+    )
+
+    record.update(
+        {
+            "desc": built.static_desc,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory_analysis": {
+                k: int(getattr(mem, k))
+                for k in (
+                    "argument_size_in_bytes",
+                    "output_size_in_bytes",
+                    "temp_size_in_bytes",
+                    "generated_code_size_in_bytes",
+                )
+                if hasattr(mem, k)
+            },
+            "cost_analysis_raw": {   # XLA's own (loop bodies ONCE)
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+            "hlo_counts": {          # loop-scaled per-device
+                "flops": flops,
+                "bytes_traffic_model": bytes_accessed,
+                "collective_link_bytes": link_bytes,
+                "collective_raw_bytes": counts.coll_raw,
+                "collective_counts": counts.coll_counts,
+            },
+            "roofline": roof.row(),
+        }
+    )
+    # v5e: 16 GiB HBM per chip.  memory_analysis is per-device (post-SPMD).
+    ma = record["memory_analysis"]
+    hbm_need = ma.get("argument_size_in_bytes", 0) + ma.get(
+        "temp_size_in_bytes", 0
+    )
+    record["hbm_bytes_per_chip"] = hbm_need
+    record["fits_hbm_16gib"] = bool(hbm_need <= 16 * 2**30)
+    if verbose:
+        ma = record["memory_analysis"]
+        args_gib = ma.get("argument_size_in_bytes", 0) / 2**30
+        tmp_gib = ma.get("temp_size_in_bytes", 0) / 2**30
+        print(
+            f"[dryrun] {arch} × {shape_name} × {mesh_name}: OK "
+            f"lower={t_lower:.1f}s compile={t_compile:.1f}s "
+            f"args={args_gib:.2f}GiB temp={tmp_gib:.2f}GiB "
+            f"flops={flops:.3e} coll={link_bytes:.3e}B "
+            f"bottleneck={roof.bottleneck}"
+        )
+        # the two artifacts the deliverable asks to print:
+        print(f"  memory_analysis: {ma}")
+        print(
+            "  cost_analysis: flops=%.4g bytes=%.4g" % (flops, bytes_accessed)
+        )
+    return record
+
+
+def save_record(record: Dict[str, Any]) -> str:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(
+        ARTIFACT_DIR,
+        f"{record['arch']}__{record['shape']}__{record['mesh']}.json",
+    )
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return path
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) cell")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape_name in SHAPES:
+                cells.append((arch, shape_name))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch, shape_name in cells:
+        for multi in meshes:
+            mesh_name = "multi" if multi else "single"
+            out = os.path.join(
+                ARTIFACT_DIR, f"{arch}__{shape_name}__{mesh_name}.json"
+            )
+            if args.skip_existing and os.path.exists(out):
+                print(f"[dryrun] skip existing {out}")
+                continue
+            try:
+                record = run_cell(arch, shape_name, multi_pod=multi)
+                save_record(record)
+            except Exception as e:  # noqa: BLE001
+                traceback.print_exc()
+                failures.append((arch, shape_name, mesh_name, repr(e)))
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("   ", f)
+        return 1
+    print(f"[dryrun] all {len(cells) * len(meshes)} cells OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,48 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (module import never touches jax
+device state): single pod = (16, 16) chips over ("data", "model");
+multi-pod = (2, 16, 16) over ("pod", "data", "model").  The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import so both meshes can be built on this CPU-only container.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (elastic restarts, tests)."""
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """1x1 mesh on the local device (smoke tests, examples)."""
+    n = len(jax.devices())
+    if n >= 2:
+        return jax.make_mesh((1, n), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_chip_count(mesh: Mesh) -> int:
+    n = 1
+    for a in mesh.axis_names:
+        n *= mesh.shape[a]
+    return n
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    n = mesh.shape.get("data", 1)
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n

@@ -1,0 +1,66 @@
+"""Production serving driver: SpotHedge-managed fleet + request replay.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch command-r-35b \
+        --trace aws-3 --policy spothedge --hours 4
+
+Runs the full control plane (SpotHedge placement + dynamic fallback +
+autoscaler + least-loaded LB) against a recorded spot trace with the
+roofline-derived data-plane latency model — the §5.1 methodology.  Swap
+``--live`` (reduced arch) to serve real tokens from in-process JAX engines
+(see examples/serve_llm.py for the live path).
+"""
+
+import argparse
+import sys
+
+from repro.cluster.simulator import SimConfig
+from repro.cluster.traces import TraceLibrary
+from repro.configs import ARCH_IDS, get_config
+from repro.core.autoscaler import LoadAutoscaler
+from repro.core.policy import make_policy, registered_policies
+from repro.serving.sim import ServingSimulator
+from repro.workloads import make_workload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="command-r-35b")
+    ap.add_argument("--trace", default="aws-3")
+    ap.add_argument("--policy", default="spothedge",
+                    choices=registered_policies())
+    ap.add_argument("--workload", default="arena",
+                    choices=["poisson", "arena", "maf"])
+    ap.add_argument("--itype", default="g5.48xlarge")
+    ap.add_argument("--hours", type=float, default=4.0)
+    ap.add_argument("--rate", type=float, default=2.0)
+    ap.add_argument("--qps-per-replica", type=float, default=0.8)
+    ap.add_argument("--timeout", type=float, default=100.0)
+    args = ap.parse_args(argv)
+
+    trace = TraceLibrary().get(args.trace)
+    cfg = get_config(args.arch)
+    kw = {"rate_per_s": args.rate} if args.workload == "poisson" else {
+        "base_rate_per_s": args.rate
+    }
+    reqs = make_workload(args.workload, seed=11, **kw).generate(
+        args.hours * 3600 - 600
+    )
+    print(f"[serve] {args.policy} serving {cfg.name} on {args.itype}: "
+          f"{len(reqs)} requests / {args.hours}h over trace {trace.name}")
+    sim = ServingSimulator(
+        trace, make_policy(args.policy), reqs, cfg, itype=args.itype,
+        autoscaler=LoadAutoscaler(
+            args.qps_per_replica, min_replicas=2, max_replicas=12,
+            upscale_delay_s=60.0, downscale_delay_s=600.0,
+            initial_target=4,
+        ),
+        timeout_s=args.timeout, workload_name=args.workload, concurrency=4,
+        sim_config=SimConfig(itype=args.itype, control_interval_s=15.0),
+    )
+    res = sim.run(args.hours * 3600)
+    print(res.summary())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,40 @@
+"""Model zoo: the 10 assigned architectures as composable pure-JAX modules.
+
+Everything is expressed with the *blueprint* system in ``repro.models.base``:
+a model definition builds a pytree of :class:`ParamSpec` (shape, dtype,
+logical axes, initializer).  From that single definition we derive
+
+* ``init_params``      — materialized parameters (smoke tests, examples),
+* ``abstract_params``  — ``jax.ShapeDtypeStruct`` stand-ins (the multi-pod
+  dry-run lowers 35B-parameter models without allocating a byte),
+* ``logical_axes``     — logical sharding axes, mapped to mesh axes by
+  ``repro.distributed.sharding``.
+
+``TransformerLM`` covers dense / GQA / SWA / MoE / SSM / hybrid decoder-only
+architectures (plus PaliGemma's prefix-embedding mode); ``EncDecLM`` covers
+Whisper.  ``repro.models.registry`` builds either from a ``ModelConfig``.
+"""
+
+from repro.models.base import (
+    ParamSpec,
+    abstract_params,
+    init_params,
+    logical_axes,
+    param_count,
+)
+from repro.models.config import ModelConfig
+from repro.models.lm import TransformerLM
+from repro.models.whisper import EncDecLM
+from repro.models.registry import build_model
+
+__all__ = [
+    "ParamSpec",
+    "abstract_params",
+    "init_params",
+    "logical_axes",
+    "param_count",
+    "ModelConfig",
+    "TransformerLM",
+    "EncDecLM",
+    "build_model",
+]

@@ -1,0 +1,165 @@
+"""Mixture-of-Experts layer (phi3.5-moe 16e/top-2, qwen3-moe 128e/top-8).
+
+GShard/Switch-style capacity-based dispatch: static shapes, shardable with
+EP (experts over the 'model' mesh axis).  Per expert capacity
+``C = ceil(tokens · top_k / E · capacity_factor)``; overflow tokens drop
+their contribution from the overflowing expert (their other experts still
+fire).  The expert matmul is the MoE grouped-matmul hot spot — on TPU it is
+served by the ``repro.kernels.moe_gmm`` Pallas kernel; the jnp path uses a
+batched einsum over the expert axis.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamSpec, dense_spec
+from repro.models.config import ModelConfig
+
+
+def moe_blueprint(cfg: ModelConfig) -> Dict[str, Any]:
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.num_experts
+    bp: Dict[str, Any] = {
+        "router": dense_spec(d, e, "embed", None),
+        "wi": ParamSpec((e, d, f), ("experts", "embed", "expert_mlp")),
+        "wo": ParamSpec((e, f, d), ("experts", "expert_mlp", "embed")),
+    }
+    if cfg.mlp_gated:
+        bp["wg"] = ParamSpec((e, d, f), ("experts", "embed", "expert_mlp"))
+    return bp
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = math.ceil(
+        n_tokens * cfg.experts_per_token / cfg.num_experts
+        * cfg.capacity_factor
+    )
+    return max(int(c), 1)
+
+
+def route_topk(
+    router_logits: jax.Array,   # (N, E) fp32
+    top_k: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k routing with softmax-renormalized combine weights."""
+    gates = jax.nn.softmax(router_logits, axis=-1)
+    weights, idx = jax.lax.top_k(gates, top_k)          # (N, k)
+    weights = weights / jnp.maximum(
+        weights.sum(axis=-1, keepdims=True), 1e-9
+    )
+    return weights, idx
+
+
+def moe_apply(
+    p: Dict[str, Any],
+    cfg: ModelConfig,
+    x: jax.Array,                    # (B, S, d)
+    *,
+    impl: str = "einsum",            # "einsum" | "pallas"
+    return_aux: bool = False,
+    chunk_tokens: int = 16_384,
+):
+    """Capacity-based top-k MoE, chunked over tokens.
+
+    Expert capacity is proportional to the CHUNK token count, so the
+    dispatch buffer is O(chunk x d) regardless of sequence length (a 1M-
+    token prefill would otherwise materialize a multi-GiB (E, C, d)
+    scatter target).  Chunks run under ``lax.scan``.
+    Returns (y, aux_loss?) — aux is the Switch load-balancing loss."""
+    B, S, d = x.shape
+    N = B * S
+    if N > chunk_tokens and N % chunk_tokens == 0:
+        xf = x.reshape(N // chunk_tokens, 1, chunk_tokens, d)
+
+        def step(aux_acc, xc):
+            y, aux = moe_apply(
+                p, cfg, xc, impl=impl, return_aux=return_aux,
+                chunk_tokens=chunk_tokens,
+            )
+            if aux is None:
+                aux = jnp.zeros((), jnp.float32)
+            return aux_acc + aux, y
+
+        aux_sum, ys = jax.lax.scan(
+            step, jnp.zeros((), jnp.float32), xf
+        )
+        y = ys.reshape(B, S, d)
+        return (y, aux_sum / (N // chunk_tokens)) if return_aux \
+            else (y, None)
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = _capacity(cfg, N)
+    dt = x.dtype
+
+    xf = x.reshape(N, d)
+    router_logits = (
+        xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    )
+    weights, expert_idx = route_topk(router_logits, k)   # (N,k)
+
+    # ---- capacity assignment -------------------------------------------
+    # position of each (token, k) within its expert's queue
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # (N,k,E)
+    flat_onehot = onehot.reshape(N * k, E)
+    pos_in_expert = (
+        jnp.cumsum(flat_onehot, axis=0) * flat_onehot
+    ).sum(axis=-1) - 1                                    # (N*k,)
+    expert_flat = expert_idx.reshape(N * k)
+    keep = pos_in_expert < C
+    slot = jnp.where(keep, pos_in_expert, C)              # C = overflow bin
+
+    # dispatch: scatter tokens into (E, C+1, d), drop the overflow bin.
+    # Each (token, k) owns a unique slot, so scatter-add == scatter-set and
+    # the transport dtype may be quantized: with moe_dispatch_dtype =
+    # "float8_e4m3fn" the cross-shard token movement (the EP all-to-all —
+    # the dominant collective of high-top-k MoE) halves (§Perf 5).
+    wire_dt = (
+        jnp.dtype(cfg.moe_dispatch_dtype) if cfg.moe_dispatch_dtype else dt
+    )
+    dispatch_idx = expert_flat * (C + 1) + slot           # (N*k,)
+    token_idx = jnp.repeat(jnp.arange(N), k)
+    buf = jnp.zeros((E * (C + 1), d), wire_dt)
+    buf = buf.at[dispatch_idx].add(
+        (xf[token_idx] * keep[:, None]).astype(wire_dt)
+    )
+    xe = buf.reshape(E, C + 1, d)[:, :C].astype(dt)       # (E, C, d)
+
+    # ---- expert FFN -------------------------------------------------------
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        ye = kops.moe_ffn(
+            xe, p["wi"].astype(dt),
+            p.get("wg", None) if "wg" in p else None,
+            p["wo"].astype(dt), act=cfg.act,
+        )
+    else:
+        h = jnp.einsum("ecd,edf->ecf", xe, p["wi"].astype(dt))
+        act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+        if "wg" in p:
+            g = jnp.einsum("ecd,edf->ecf", xe, p["wg"].astype(dt))
+            h = act(g) * h
+        else:
+            h = act(h)
+        ye = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))
+
+    # ---- combine (same quantized wire format on the way back) -----------
+    ye_flat = jnp.concatenate(
+        [ye, jnp.zeros((E, 1, d), ye.dtype)], axis=1
+    ).reshape(E * (C + 1), d).astype(wire_dt)
+    gathered = ye_flat[dispatch_idx].astype(dt)           # (N*k, d)
+    w = (weights.reshape(N * k) * keep).astype(dt)
+    y = jnp.zeros((N, d), dt).at[token_idx].add(gathered * w[:, None])
+    y = y.reshape(B, S, d)
+
+    if not return_aux:
+        return y, None
+    # Switch aux loss: E * sum_e f_e * P_e
+    probs = jax.nn.softmax(router_logits, axis=-1)        # (N,E)
+    f = (onehot.sum(axis=1) > 0).astype(jnp.float32).mean(axis=0)  # (E,)
+    pbar = probs.mean(axis=0)
+    aux = cfg.num_experts * jnp.sum(f * pbar) * cfg.router_aux_coef
+    return y, aux

@@ -1,0 +1,23 @@
+"""Build a model object from a ModelConfig (``--arch`` entry point)."""
+
+from __future__ import annotations
+
+from typing import Any, Union
+
+from repro.models.config import ModelConfig
+from repro.models.lm import TransformerLM
+from repro.models.whisper import EncDecLM
+
+Model = Union[TransformerLM, EncDecLM]
+
+
+def build_model(cfg: ModelConfig, **kwargs: Any) -> Model:
+    """Instantiate the right model class for a config.
+
+    kwargs are forwarded (``impl``, ``q_block``, ``kv_block``, ``ssm_chunk``,
+    ``remat``) so callers can select jnp vs Pallas paths and block shapes.
+    """
+    if cfg.is_encdec:
+        kwargs.pop("ssm_chunk", None)
+        return EncDecLM(cfg, **kwargs)
+    return TransformerLM(cfg, **kwargs)

@@ -1,0 +1,357 @@
+"""State-space sequence mixers: Mamba-1 (falcon-mamba) and Mamba-2/SSD
+(zamba2).
+
+Full-sequence processing is *chunked*: an outer ``lax.scan`` carries the SSM
+state across chunks; within a chunk Mamba-1 uses an associative scan and
+Mamba-2 uses the SSD matrix form (chunk-local quadratic + state passing).
+Live memory is O(chunk) — the 500k-token dry-run depends on this.
+
+Decode is a single-step recurrence with carried ``(conv_state, ssm_state)``
+— O(1) in context length, which is why the SSM/hybrid architectures are the
+ones that run the ``long_500k`` shape.
+
+TPU hot spot: the within-chunk scan is served by the
+``repro.kernels.selective_scan`` Pallas kernel (Mamba-1) — jnp paths here
+double as its oracle.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamSpec, dense_spec
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm, rmsnorm_spec
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (shared by both mamba versions)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(
+    x: jax.Array,               # (B, S, C)
+    w: jax.Array,               # (K, C) depthwise taps
+    bias: Optional[jax.Array],  # (C,)
+    prev: Optional[jax.Array] = None,   # (B, K-1, C) carried context
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,C), new_prev (B,K-1,C))."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev.astype(x.dtype), x], axis=1)  # (B, S+K-1, C)
+    y = jnp.zeros_like(x)
+    for tap in range(K):
+        y = y + xp[:, tap : tap + x.shape[1]] * w[tap].astype(x.dtype)
+    if bias is not None:
+        y = y + bias.astype(x.dtype)
+    new_prev = xp[:, -(K - 1):] if K > 1 else prev
+    return y, new_prev
+
+
+# ===========================================================================
+# Mamba-1 (falcon-mamba-7b)
+# ===========================================================================
+
+
+def mamba1_blueprint(cfg: ModelConfig) -> Dict[str, Any]:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(1, math.ceil(d / 16))
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((cfg.ssm_conv, di), ("conv", "ssm_inner")),
+        "conv_b": ParamSpec((di,), ("ssm_inner",), "zeros"),
+        "x_proj": ParamSpec((di, dt_rank + 2 * N), ("ssm_inner", None)),
+        "dt_proj": ParamSpec((dt_rank, di), (None, "ssm_inner")),
+        "dt_bias": ParamSpec((di,), ("ssm_inner",), "zeros"),
+        # A_log: A = -exp(A_log); init so A ~ -[1..N] rows (S4D-real)
+        "A_log": ParamSpec((di, N), ("ssm_inner", "ssm_state"), "zeros"),
+        "D": ParamSpec((di,), ("ssm_inner",), "ones"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mamba1_coeffs(p, cfg, x_conv, dt):
+    """delta/B/C from the conv output; returns (a, bx, C) per step."""
+    di, N = cfg.d_inner, cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    proj = x_conv @ p["x_proj"].astype(dt)               # (B,S,R+2N)
+    delta_r, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + N], axis=-1)
+    delta = jax.nn.softplus(
+        delta_r @ p["dt_proj"].astype(dt) + p["dt_bias"].astype(dt)
+    ).astype(jnp.float32)                                 # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (di,N)
+    a = jnp.exp(delta[..., None] * A)                     # (B,S,di,N)
+    bx = (delta * x_conv.astype(jnp.float32))[..., None] \
+        * Bc.astype(jnp.float32)[..., None, :]            # (B,S,di,N)
+    return a, bx, Cc.astype(jnp.float32)
+
+
+def mamba1_full(
+    p: Dict[str, Any],
+    cfg: ModelConfig,
+    x: jax.Array,                    # (B, S, d)
+    *,
+    chunk: int = 256,
+    state: Optional[Dict[str, jax.Array]] = None,
+    impl: str = "jnp",
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence mamba-1; returns (y, {"conv","ssm"} final state)."""
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    dt = x.dtype
+
+    xz = x @ p["in_proj"].astype(dt)                      # (B,S,2di)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    conv_prev = None if state is None else state["conv"]
+    x_conv, conv_state = causal_conv1d(
+        xin, p["conv_w"], p["conv_b"], conv_prev
+    )
+    x_conv = jax.nn.silu(x_conv)
+
+    a, bx, Cc = _mamba1_coeffs(p, cfg, x_conv, dt)
+
+    h0 = (
+        jnp.zeros((B, di, N), jnp.float32)
+        if state is None
+        else state["ssm"].astype(jnp.float32)
+    )
+
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    nchunks = (S + pad) // chunk
+
+    ach = a.reshape(B, nchunks, chunk, di, N).transpose(1, 0, 2, 3, 4)
+    bch = bx.reshape(B, nchunks, chunk, di, N).transpose(1, 0, 2, 3, 4)
+    cch = Cc.reshape(B, nchunks, chunk, N).transpose(1, 0, 2, 3)
+
+    def chunk_step(h, inputs):
+        ac, bc, cc = inputs           # (B,chunk,di,N), ..., (B,chunk,N)
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+
+            hs = kops.selective_scan(ac, bc, h)
+        else:
+            # within-chunk associative scan: (a, b) ∘ (a', b') =
+            # (a'·a, a'·b + b')
+            def combine(l, r):
+                al, bl = l
+                ar, br = r
+                return al * ar, bl * ar + br
+
+            a_s, b_s = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+            hs = b_s + a_s * h[:, None]                   # (B,chunk,di,N)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, cc)
+        return hs[:, -1], y
+
+    hN, ys = jax.lax.scan(
+        chunk_step, h0, (ach, bch, cch)
+    )  # ys: (nchunks, B, chunk, di)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nchunks * chunk, di)[:, :S]
+    y = y + x_conv.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt)
+    out = y @ p["out_proj"].astype(dt)
+    return out, {"conv": conv_state, "ssm": hN.astype(jnp.float32)}
+
+
+def mamba1_decode(
+    p: Dict[str, Any],
+    cfg: ModelConfig,
+    x: jax.Array,                    # (B, 1, d)
+    state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B = x.shape[0]
+    dt = x.dtype
+    xz = x @ p["in_proj"].astype(dt)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    x_conv, conv_state = causal_conv1d(
+        xin, p["conv_w"], p["conv_b"], state["conv"]
+    )
+    x_conv = jax.nn.silu(x_conv)
+    a, bx, Cc = _mamba1_coeffs(p, cfg, x_conv, dt)
+    h = state["ssm"].astype(jnp.float32) * a[:, 0] + bx[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, Cc[:, 0])[:, None]
+    y = y + x_conv.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt)
+    return y @ p["out_proj"].astype(dt), {"conv": conv_state, "ssm": h}
+
+
+def mamba1_state_shapes(cfg: ModelConfig, batch: int) -> Dict[str, tuple]:
+    return {
+        "conv": (batch, cfg.ssm_conv - 1, cfg.d_inner),
+        "ssm": (batch, cfg.d_inner, cfg.ssm_state),
+    }
+
+
+# ===========================================================================
+# Mamba-2 / SSD (zamba2)
+# ===========================================================================
+
+
+def mamba2_blueprint(cfg: ModelConfig) -> Dict[str, Any]:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_heads
+    conv_dim = di + 2 * N          # conv over [x, B, C], single group
+    return {
+        # zxbcdt projection: [z(di), x(di), B(N), C(N), dt(H)]
+        "in_proj": ParamSpec((d, 2 * di + 2 * N + H), ("embed", "ssm_inner")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), ("conv", "ssm_inner")),
+        "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), "zeros"),
+        "dt_bias": ParamSpec((H,), ("heads",), "zeros"),
+        "A_log": ParamSpec((H,), ("heads",), "zeros"),
+        "D": ParamSpec((H,), ("heads",), "ones"),
+        "norm": rmsnorm_spec(di, "ssm_inner"),
+        "out_proj": ParamSpec((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _segsum(loga: jax.Array) -> jax.Array:
+    """Stable 'segment sum': out[..., i, j] = sum_{j<t<=i} loga[..., t],
+    -inf for j > i.  loga: (..., Q) -> (..., Q, Q)."""
+    Q = loga.shape[-1]
+    cs = jnp.cumsum(loga, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]            # sum_(j, i]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_full(
+    p: Dict[str, Any],
+    cfg: ModelConfig,
+    x: jax.Array,                    # (B, S, d)
+    *,
+    chunk: int = 256,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked SSD (Mamba-2).  Single B/C group."""
+    Bsz, S, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    dt = x.dtype
+
+    zxbcdt = x @ p["in_proj"].astype(dt)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    conv_prev = None if state is None else state["conv"]
+    xbc, conv_state = causal_conv1d(xbc, p["conv_w"], p["conv_b"], conv_prev)
+    xbc = jax.nn.silu(xbc)
+    xin, Bc, Cc = jnp.split(xbc, [di, di + N], axis=-1)
+
+    delta = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                                     # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (H,)
+    loga = delta * A                                       # (B,S,H)
+    xh = xin.reshape(Bsz, S, H, P).astype(jnp.float32)
+    Bc = Bc.astype(jnp.float32)                            # (B,S,N)
+    Cc = Cc.astype(jnp.float32)
+
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+        delta = jnp.pad(delta, ((0, 0), (0, pad), (0, 0)))
+    nchunks = (S + pad) // chunk
+
+    def r(t, shape):  # (B, nchunks, chunk, ...) -> scan-major
+        return t.reshape((Bsz, nchunks, chunk) + shape).transpose(
+            (1, 0, 2) + tuple(range(3, 3 + len(shape)))
+        )
+
+    loga_c = r(loga, (H,))
+    x_c = r(xh, (H, P))
+    B_c = r(Bc, (N,))
+    C_c = r(Cc, (N,))
+    dt_c = r(delta, (H,))
+
+    h0 = (
+        jnp.zeros((Bsz, H, P, N), jnp.float32)
+        if state is None
+        else state["ssm"].astype(jnp.float32)
+    )
+
+    def chunk_step(h, inputs):
+        la, xc, bc, cc, dc = inputs
+        # la: (B,Q,H)  xc: (B,Q,H,P)  bc/cc: (B,Q,N)  dc: (B,Q,H)
+        lah = la.transpose(0, 2, 1)                        # (B,H,Q)
+        L = jnp.exp(_segsum(lah))                          # (B,H,Q,Q)
+        # intra-chunk (attention-like): Y1[i] = sum_j<=i C_i·B_j L_ij dt_j x_j
+        G = jnp.einsum("bin,bjn->bij", cc, bc)             # (B,Q,Q)
+        M = G[:, None] * L                                  # (B,H,Q,Q)
+        y_intra = jnp.einsum("bhij,bjh,bjhp->bihp", M, dc, xc)
+        # inter-chunk: contribution of the carried state
+        cumla = jnp.exp(jnp.cumsum(lah, axis=-1))          # (B,H,Q)
+        y_inter = jnp.einsum(
+            "bin,bhnp,bhi->bihp", cc, h.transpose(0, 1, 3, 2), cumla
+        )
+        y = y_intra + y_inter                               # (B,Q,H,P)
+        # state update: h' = a_tot h + sum_j (prod_{t>j} a) dt_j B_j x_j
+        a_tot = cumla[..., -1]                              # (B,H)
+        decay = jnp.exp(
+            jnp.cumsum(lah[..., ::-1], axis=-1)[..., ::-1] - lah
+        )                                                   # (B,H,Q): prod_{t>j}
+        dBx = jnp.einsum("bjh,bjn,bjhp->bhpn", dc * decay.transpose(0, 2, 1),
+                         bc, xc)
+        h_new = h * a_tot[..., None, None] + dBx
+        return h_new, y
+
+    hN, ys = jax.lax.scan(chunk_step, h0, (loga_c, x_c, B_c, C_c, dt_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, nchunks * chunk, H, P)
+    y = y[:, :S]
+    y = y + xh[:, :S] * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(dt), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(dt)
+    return out, {"conv": conv_state, "ssm": hN}
+
+
+def mamba2_decode(
+    p: Dict[str, Any],
+    cfg: ModelConfig,
+    x: jax.Array,                    # (B,1,d)
+    state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    Bsz = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    dt = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(dt)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+    xbc, conv_state = causal_conv1d(
+        xbc, p["conv_w"], p["conv_b"], state["conv"]
+    )
+    xbc = jax.nn.silu(xbc)
+    xin, Bc, Cc = jnp.split(xbc, [di, di + N], axis=-1)
+    delta = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                                     # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(delta * A)                                 # (B,H)
+    xh = xin[:, 0].reshape(Bsz, H, P).astype(jnp.float32)
+    h = state["ssm"].astype(jnp.float32)
+    h = h * a[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", delta, Bc[:, 0].astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h, Cc[:, 0].astype(jnp.float32))
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, 1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(dt), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(dt), {"conv": conv_state, "ssm": h}
+
+
+def mamba2_state_shapes(cfg: ModelConfig, batch: int) -> Dict[str, tuple]:
+    return {
+        "conv": (batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * cfg.ssm_state),
+        "ssm": (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+    }

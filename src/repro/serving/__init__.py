@@ -1,0 +1,27 @@
+"""Serving data plane: latency model, replicas, LB, controller, engine.
+
+Two execution modes share the same control plane (policy / autoscaler /
+controller / LB):
+
+* **simulated replicas** (``sim.py``): request service times come from the
+  roofline-derived latency model — this is how the paper's §5 experiments
+  replay 22-hour workloads in seconds;
+* **live replicas** (``engine.py``): a real JAX inference engine (prefill +
+  continuous-batching decode) serves actual tokens; preemptions are
+  injected into the running fleet (the §5.1 analogue on this container).
+"""
+
+from repro.serving.latency import LatencyModel
+from repro.serving.load_balancer import LeastLoadedBalancer, RoundRobinBalancer
+from repro.serving.replica import Replica, ReplicaState
+from repro.serving.sim import ServingSimulator, ServingResult
+
+__all__ = [
+    "LatencyModel",
+    "LeastLoadedBalancer",
+    "RoundRobinBalancer",
+    "Replica",
+    "ReplicaState",
+    "ServingSimulator",
+    "ServingResult",
+]

@@ -1,0 +1,106 @@
+"""Roofline-derived request latency model per (model config × instance).
+
+The paper's Fig. 6a decomposes a Vicuna-13B request: model execution time
+(prefill + per-token decode) dominates; network RTT is tens of ms.  We
+reproduce that structure analytically so the serving simulator's service
+times are grounded in the same hardware model as the §Roofline analysis:
+
+    prefill_s(P)      = 2·N·P FLOPs / (accels × peak_flops × MFU_prefill)
+    decode_s_per_tok  = weight bytes / (accels × HBM_bw) / MBU_decode
+    service_s(req)    = prefill + out_tokens × decode + overhead
+
+Prefill is compute-bound (MFU ~0.45 on a tuned engine); decode is
+HBM-bound (weights re-read per token; MBU ~0.7).  The same model yields a
+replica's max concurrency from its HBM capacity (KV per request).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.cluster.catalog import InstanceType
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    cfg: ModelConfig
+    itype: InstanceType
+    n_params: float
+    mfu_prefill: float = 0.45
+    mbu_decode: float = 0.70
+    overhead_s: float = 0.05        # tokenize/detokenize/HTTP
+
+    @classmethod
+    def for_model(cls, cfg: ModelConfig, itype: InstanceType,
+                  n_params: float = 0.0) -> "LatencyModel":
+        n = n_params or float(cfg.approx_params())
+        return cls(cfg=cfg, itype=itype, n_params=n)
+
+    # ------------------------------------------------------------------
+    @property
+    def _active_params(self) -> float:
+        cfg = self.cfg
+        if not cfg.is_moe:
+            return self.n_params
+        expert = (
+            cfg.num_layers * cfg.num_experts
+            * (3 if cfg.mlp_gated else 2) * cfg.d_model * cfg.expert_d_ff
+        )
+        return self.n_params - expert * (
+            1.0 - cfg.experts_per_token / cfg.num_experts
+        )
+
+    @property
+    def flops_per_s(self) -> float:
+        return (
+            self.itype.accel_count
+            * self.itype.peak_bf16_tflops * 1e12
+            * self.mfu_prefill
+        )
+
+    @property
+    def hbm_bytes_per_s(self) -> float:
+        # scale HBM bw with the accelerator class (A100 2 TB/s, V100
+        # 0.9 TB/s, T4 0.3 TB/s, A10G 0.6 TB/s, v5e 0.819 TB/s)
+        bw = {
+            "A100": 2.0e12, "V100": 0.9e12, "T4": 0.3e12,
+            "A10G": 0.6e12, "K80": 0.24e12, "TPUv5e": 0.819e12,
+        }.get(self.itype.accelerator, 0.8e12)
+        return self.itype.accel_count * bw * self.mbu_decode
+
+    # ------------------------------------------------------------------
+    def prefill_s(self, prompt_tokens: int) -> float:
+        return 2.0 * self._active_params * prompt_tokens / self.flops_per_s
+
+    def decode_s_per_token(self) -> float:
+        weight_bytes = 2.0 * self._active_params     # bf16
+        return weight_bytes / self.hbm_bytes_per_s
+
+    def service_s(self, prompt_tokens: int, output_tokens: int) -> float:
+        return (
+            self.overhead_s
+            + self.prefill_s(prompt_tokens)
+            + output_tokens * self.decode_s_per_token()
+        )
+
+    # ------------------------------------------------------------------
+    def max_concurrency(self, max_ctx: int = 4096) -> int:
+        """Requests servable concurrently from leftover HBM (KV budget).
+        Attention-free archs are compute-limited instead (use 32)."""
+        cfg = self.cfg
+        hbm = (
+            self.itype.accel_count * self.itype.hbm_gib_per_accel * 2**30
+        )
+        weights = 2.0 * self.n_params
+        free = max(hbm * 0.9 - weights, hbm * 0.05)
+        if cfg.num_kv_heads and cfg.resolved_head_dim:
+            slots = (
+                min(max_ctx, cfg.sliding_window or max_ctx)
+            )
+            kv_per_req = (
+                2 * cfg.num_layers * slots * cfg.num_kv_heads
+                * cfg.resolved_head_dim * 2
+            )
+            return max(1, int(free / kv_per_req))
+        return 32

@@ -1,0 +1,72 @@
+"""Load balancers (§4): round-robin and least-outstanding-requests, with
+cross-region RTT accounting and client-side retry on replica death.
+
+The balancer only routes to replicas whose readiness probe has passed (the
+controller forwards the ready set each tick).  Requests carry the client
+region; the RTT to the serving replica's region is added to the measured
+end-to-end latency (Fig. 6b model) — the paper's argument is that this
+term is small against LLM processing time.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.cluster.catalog import Catalog, region_rtt_ms
+from repro.serving.replica import Replica, ReplicaState
+from repro.workloads.arrivals import Request
+
+
+class LoadBalancer:
+    name = "lb"
+
+    def __init__(self) -> None:
+        self._ready: List[Replica] = []
+
+    def update_ready(self, replicas: Sequence[Replica]) -> None:
+        self._ready = [
+            r for r in replicas if r.state is ReplicaState.READY
+        ]
+
+    def pick(self, req: Request, now: float) -> Optional[Replica]:
+        raise NotImplementedError
+
+    def route(self, req: Request, now: float) -> Optional[Replica]:
+        r = self.pick(req, now)
+        if r is not None:
+            r.submit(req, now)
+        return r
+
+    @staticmethod
+    def rtt_s(req: Request, replica: Replica) -> float:
+        return region_rtt_ms(req.client_region, replica.region) / 1e3
+
+
+class RoundRobinBalancer(LoadBalancer):
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._cursor = 0
+
+    def pick(self, req: Request, now: float) -> Optional[Replica]:
+        if not self._ready:
+            return None
+        r = self._ready[self._cursor % len(self._ready)]
+        self._cursor += 1
+        return r
+
+
+class LeastLoadedBalancer(LoadBalancer):
+    """Route to the replica with the fewest outstanding requests; ties go
+    to the lower-RTT region (the §6 'advanced policy' extension)."""
+
+    name = "least_loaded"
+
+    def pick(self, req: Request, now: float) -> Optional[Replica]:
+        if not self._ready:
+            return None
+        return min(
+            self._ready,
+            key=lambda r: (r.load, self.rtt_s(req, r), r.id),
+        )

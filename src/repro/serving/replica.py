@@ -1,0 +1,139 @@
+"""Replica: an inference endpoint bound to a cloud instance.
+
+Lifecycle mirrors the controller's view (§4): the instance provisions
+(cold start d covers VM boot + image + model load), then the readiness
+probe flips the replica READY and the LB may route to it.  A preemption
+kills the replica; its in-flight requests fail and are retried client-side
+(the failure time counts into end-to-end latency — §5.1 methodology).
+
+In simulation the replica is an M/G/c-style server: ``concurrency`` slots,
+FIFO queue, service times from the latency model.  In live mode the same
+object fronts a ``repro.serving.engine.Engine``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.cluster.instance import Instance
+from repro.serving.latency import LatencyModel
+from repro.workloads.arrivals import Request
+
+
+class ReplicaState(enum.Enum):
+    PROVISIONING = "provisioning"
+    READY = "ready"
+    DEAD = "dead"
+
+
+@dataclasses.dataclass
+class InFlight:
+    request: Request
+    started_s: float
+    finish_s: float
+
+
+class Replica:
+    """One model replica on one instance."""
+
+    def __init__(
+        self,
+        instance: Instance,
+        latency: LatencyModel,
+        *,
+        concurrency: Optional[int] = None,
+        timeout_s: float = 0.0,      # 0: requests never expire in queue
+    ) -> None:
+        self.instance = instance
+        self.latency = latency
+        self.concurrency = concurrency or min(
+            latency.max_concurrency(), 16
+        )
+        self.timeout_s = timeout_s
+        self.state = ReplicaState.PROVISIONING
+        self.queue: List[Request] = []
+        self.running: List[InFlight] = []
+        self.completed = 0
+
+    # -- lifecycle ------------------------------------------------------
+    @property
+    def id(self) -> int:
+        return self.instance.id
+
+    @property
+    def zone(self) -> str:
+        return self.instance.zone
+
+    @property
+    def region(self) -> str:
+        return self.instance.region
+
+    def readiness_probe(self, now: float) -> bool:
+        """§4: periodic health probe; flips PROVISIONING -> READY."""
+        if self.state is ReplicaState.PROVISIONING and \
+                self.instance.is_ready():
+            self.state = ReplicaState.READY
+        return self.state is ReplicaState.READY
+
+    def kill(self) -> List[Request]:
+        """Preemption/termination: fail queue + in-flight; return them for
+        client-side retry."""
+        self.state = ReplicaState.DEAD
+        failed = [f.request for f in self.running] + self.queue
+        self.running, self.queue = [], []
+        return failed
+
+    # -- request path --------------------------------------------------
+    @property
+    def load(self) -> int:
+        return len(self.running) + len(self.queue)
+
+    def submit(self, req: Request, now: float) -> None:
+        self.queue.append(req)
+
+    def step(self, now: float) -> Tuple[
+        List[Tuple[Request, float]], List[Request]
+    ]:
+        """Advance to ``now``: complete finished work, expire abandoned
+        queue entries (client hung up past its timeout), start queued work.
+        Returns (completions [(request, completion_time)], expired)."""
+        done: List[Tuple[Request, float]] = []
+        still: List[InFlight] = []
+        for f in self.running:
+            if f.finish_s <= now:
+                done.append((f.request, f.finish_s))
+                self.completed += 1
+            else:
+                still.append(f)
+        self.running = still
+        expired: List[Request] = []
+        if self.timeout_s > 0:
+            fresh = []
+            for q in self.queue:
+                if now - q.arrival_s > self.timeout_s:
+                    expired.append(q)
+                else:
+                    fresh.append(q)
+            self.queue = fresh
+        while self.queue and len(self.running) < self.concurrency:
+            req = self.queue.pop(0)
+            svc = self.latency.service_s(req.prompt_tokens,
+                                         req.output_tokens)
+            # mild interference: concurrent decode shares HBM bandwidth
+            factor = 1.0 + 0.15 * len(self.running)
+            self.running.append(
+                InFlight(req, now, now + svc * factor)
+            )
+        return done, expired
+
+    def eta_if_submitted(self, req: Request, now: float) -> float:
+        """Rough completion estimate used by latency-aware LBs."""
+        svc = self.latency.service_s(req.prompt_tokens, req.output_tokens)
+        backlog = sum(
+            self.latency.service_s(q.prompt_tokens, q.output_tokens)
+            for q in self.queue
+        ) / max(self.concurrency, 1)
+        return now + backlog + svc

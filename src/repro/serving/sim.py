@@ -1,0 +1,226 @@
+"""Serving-quality simulator — the §5.1 methodology, replayable.
+
+Composes the cluster simulator (policy × spot trace × instances) with the
+request path (workload → LB → replica queues → latency model).  Produces
+the paper's headline metrics: P50/P90/P99 end-to-end latency, failure
+rate (timeouts from preemption + queueing), cost, and ready-replica
+series (Fig. 9/10/13/15).
+
+Mechanics:
+
+* requests arrive continuously; the LB routes to ready replicas only,
+* a preemption kills a replica; its in-flight requests are retried by the
+  client — the wasted time counts into that request's e2e latency,
+* a request that cannot complete within ``timeout_s`` of its arrival is a
+  failure (the paper's definition),
+* replica service times come from the roofline latency model; queueing is
+  M/G/c per replica with sub-tick stepping for accurate waits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.cluster.catalog import Catalog, default_catalog
+from repro.cluster.instance import Instance
+from repro.cluster.simulator import ClusterSimulator, SimConfig
+from repro.cluster.traces import SpotTrace
+from repro.core.autoscaler import Autoscaler, ConstantTarget
+from repro.core.policy import Policy
+from repro.models.config import ModelConfig
+from repro.serving.latency import LatencyModel
+from repro.serving.load_balancer import LeastLoadedBalancer, LoadBalancer
+from repro.serving.replica import Replica, ReplicaState
+from repro.workloads.arrivals import Request
+
+
+@dataclasses.dataclass
+class ServingResult:
+    policy: str
+    trace: str
+    workload: str
+    n_requests: int
+    n_completed: int
+    n_failed: int
+    latencies_s: np.ndarray
+    total_cost: float
+    spot_cost: float
+    od_cost: float
+    cost_vs_ondemand: float
+    availability: float
+
+    @property
+    def failure_rate(self) -> float:
+        return self.n_failed / max(self.n_requests, 1)
+
+    def pct(self, q: float) -> float:
+        if len(self.latencies_s) == 0:
+            return float("nan")
+        return float(np.percentile(self.latencies_s, q))
+
+    def summary(self) -> str:
+        return (
+            f"{self.policy:>16s} @ {self.trace}/{self.workload} "
+            f"p50={self.pct(50):6.2f}s p90={self.pct(90):6.2f}s "
+            f"p99={self.pct(99):7.2f}s fail={self.failure_rate:6.2%} "
+            f"cost={self.cost_vs_ondemand:6.2%} avail={self.availability:.2%}"
+        )
+
+
+class ServingSimulator:
+    def __init__(
+        self,
+        trace: SpotTrace,
+        policy: Policy,
+        requests: Sequence[Request],
+        cfg: ModelConfig,
+        *,
+        itype: str = "p3.2xlarge",
+        catalog: Optional[Catalog] = None,
+        autoscaler: Optional[Autoscaler] = None,
+        lb: Optional[LoadBalancer] = None,
+        sim_config: Optional[SimConfig] = None,
+        timeout_s: float = 100.0,
+        sub_step_s: float = 1.0,
+        workload_name: str = "workload",
+        concurrency: Optional[int] = None,
+    ) -> None:
+        self.catalog = catalog or default_catalog()
+        self.cfg = cfg
+        self.itype = self.catalog.instance_type(itype)
+        self.latency_model = LatencyModel.for_model(cfg, self.itype)
+        self.lb = lb or LeastLoadedBalancer()
+        self.timeout_s = timeout_s
+        self.sub_step_s = sub_step_s
+        self.workload_name = workload_name
+        self.concurrency = concurrency
+
+        self.requests = sorted(requests, key=lambda r: r.arrival_s)
+        self._next_arrival = 0
+        self.pending: List[Request] = []       # waiting for a replica
+        self._deadline: Dict[int, float] = {}  # req id -> timeout time
+        self._arrival: Dict[int, float] = {}
+        self.latencies: List[float] = []
+        self.failed = 0
+        self.completed = 0
+
+        self.replicas: Dict[int, Replica] = {}
+
+        cfg_sim = sim_config or SimConfig(
+            itype=itype, control_interval_s=15.0
+        )
+        cfg_sim.itype = itype
+        self.cluster = ClusterSimulator(
+            trace,
+            policy,
+            catalog=self.catalog,
+            autoscaler=autoscaler or ConstantTarget(4),
+            config=cfg_sim,
+            tick_hook=self._tick,
+        )
+        self.cluster.add_preempt_listener(self._on_dead)
+
+    # ------------------------------------------------------------------
+    def _sync_replicas(self, now: float) -> None:
+        for inst in self.cluster.instances:
+            if inst.id not in self.replicas and inst.is_active():
+                self.replicas[inst.id] = Replica(
+                    inst, self.latency_model,
+                    concurrency=self.concurrency,
+                    timeout_s=self.timeout_s,
+                )
+            elif inst.id in self.replicas and not inst.is_active():
+                self._kill_replica(inst.id, now)
+        for r in self.replicas.values():
+            r.readiness_probe(now)
+
+    def _kill_replica(self, rid: int, now: float) -> None:
+        rep = self.replicas.get(rid)
+        if rep is None or rep.state is ReplicaState.DEAD:
+            return
+        for req in rep.kill():
+            # client retry: back into the pending pool
+            self.pending.append(req)
+
+    def _on_dead(self, inst: Instance, now: float) -> None:
+        self._kill_replica(inst.id, now)
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, now: float) -> None:
+        ready = [
+            r for r in self.replicas.values()
+            if r.state is ReplicaState.READY
+        ]
+        self.lb.update_ready(ready)
+        still: List[Request] = []
+        for req in self.pending:
+            if now - self._arrival[req.id] > self.timeout_s:
+                self.failed += 1
+                continue
+            if self.lb.route(req, now) is None:
+                still.append(req)
+        self.pending = still
+
+    def _step_replicas(self, now: float) -> None:
+        for rep in self.replicas.values():
+            if rep.state is not ReplicaState.READY:
+                continue
+            done, expired = rep.step(now)
+            self.failed += len(expired)
+            for req, finish in done:
+                e2e = finish - self._arrival[req.id] + \
+                    LoadBalancer.rtt_s(req, rep)
+                if e2e > self.timeout_s:
+                    self.failed += 1
+                else:
+                    self.latencies.append(e2e)
+                    self.completed += 1
+
+    def _tick(self, now: float, cluster: ClusterSimulator) -> None:
+        dt = cluster.config.control_interval_s
+        t = now
+        end = now + dt
+        while t < end:
+            self._sync_replicas(t)
+            # deliver arrivals up to t
+            n_new = 0
+            while (
+                self._next_arrival < len(self.requests)
+                and self.requests[self._next_arrival].arrival_s <= t
+            ):
+                req = self.requests[self._next_arrival]
+                self._arrival[req.id] = req.arrival_s
+                self.pending.append(req)
+                self._next_arrival += 1
+                n_new += 1
+            if n_new:
+                cluster.autoscaler.observe(t, n_new)
+            self._dispatch(t)
+            self._step_replicas(t)
+            t += self.sub_step_s
+
+    # ------------------------------------------------------------------
+    def run(self, duration_s: Optional[float] = None) -> ServingResult:
+        base = self.cluster.run(duration_s)
+        # drain: anything still pending/in-flight past the horizon fails
+        self.failed += len(self.pending)
+        for rep in self.replicas.values():
+            self.failed += rep.load
+        n_total = self._next_arrival
+        return ServingResult(
+            policy=self.cluster.policy.name,
+            trace=self.cluster.trace.name,
+            workload=self.workload_name,
+            n_requests=n_total,
+            n_completed=self.completed,
+            n_failed=self.failed,
+            latencies_s=np.asarray(self.latencies),
+            total_cost=base.total_cost,
+            spot_cost=base.spot_cost,
+            od_cost=base.od_cost,
+            cost_vs_ondemand=base.cost_vs_ondemand,
+            availability=base.availability,
+        )

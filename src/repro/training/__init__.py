@@ -1,0 +1,13 @@
+"""Training substrate: AdamW + ZeRO-1, train-step factory, data pipeline."""
+
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.train_loop import make_train_step
+from repro.training.data import synthetic_batches
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "make_train_step",
+    "synthetic_batches",
+]

@@ -1,0 +1,140 @@
+"""AdamW in pure JAX with ZeRO-1 optimizer-state sharding.
+
+The optimizer state (m, v) mirrors the parameter pytree.  ZeRO-1: each
+(m, v) leaf additionally shards its *first replicated* dimension over the
+``data`` mesh axis when divisible — parameters stay TP-sharded/replicated
+for the forward pass while optimizer memory scales down with DP size.
+``zero1_logical`` rewrites a parameter's logical axes into the optimizer
+state's logical axes; the launch layer feeds both through the same rule
+table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def adamw_init(params: Any) -> Any:
+    """opt_state = {m, v, step}."""
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)  # noqa: E731
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (s - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def adamw_update(
+    cfg: AdamWConfig,
+    grads: Any,
+    opt_state: Any,
+    params: Any,
+) -> Tuple[Any, Any]:
+    """Returns (new_params, new_opt_state).  Gradients are clipped by global
+    norm; weight decay is decoupled."""
+    step = opt_state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(g, m, v, p)
+           for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 logical axes
+# ---------------------------------------------------------------------------
+
+
+def zero1_logical(logical: Sequence[Optional[str]],
+                  shape: Sequence[int],
+                  data_size: int) -> Tuple[Optional[str], ...]:
+    """Optimizer-state logical axes for a parameter.
+
+    The first dimension that is (a) not already sharded by a TP rule under
+    the standard tables ('heads', 'mlp', 'vocab', 'experts', 'ssm_inner',
+    'kv_heads') and (b) divisible by the data-axis size gets the 'zero'
+    logical axis (mapped to 'data' by the rule table)."""
+    tp_axes = {"heads", "kv_heads", "mlp", "vocab", "experts", "ssm_inner"}
+    out = list(logical)
+    for i, (name, dim) in enumerate(zip(logical, shape)):
+        if name in tp_axes:
+            continue
+        if dim % max(data_size, 1) == 0 and dim >= data_size > 1:
+            out[i] = "zero"
+            break
+    return tuple(out)
+
+
+def zero1_logical_tree(logical_tree: Any, abstract_tree: Any,
+                       data_size: int) -> Any:
+    is_logical = lambda x: (  # noqa: E731
+        isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x)
+    )
+    return jax.tree_util.tree_map(
+        lambda logical, ab: zero1_logical(logical, ab.shape, data_size),
+        logical_tree,
+        abstract_tree,
+        is_leaf=is_logical,
+    )

@@ -1,0 +1,154 @@
+"""Train-step factory: value_and_grad + microbatched gradient accumulation +
+optional int8 error-feedback gradient compression + AdamW.
+
+``make_train_step`` returns a pure function suitable for ``jax.jit`` /
+pjit with explicit in/out shardings (the launch layer supplies those).
+Per-layer rematerialization is handled inside the models (``remat=True``
+checkpoints each scanned block).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.training.optimizer import (
+    AdamWConfig,
+    adamw_update,
+    global_norm,
+)
+
+
+def make_loss_fn(model, cfg: ModelConfig) -> Callable:
+    """batch: {"tokens": (B,S), "labels": (B,S)[, "frames"/"patches"]}"""
+    def loss_fn(params, batch):
+        if cfg.is_encdec:
+            return model.loss(
+                params, batch["frames"], batch["tokens"], batch["labels"]
+            )
+        prefix = batch.get("patches")
+        return model.loss(
+            params, batch["tokens"], batch["labels"], prefix_embed=prefix
+        )
+    return loss_fn
+
+
+def make_train_step(
+    model,
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+    grad_specs: Any = None,   # PartitionSpec tree: ZeRO-2 grad accumulator
+    batch_spec: Any = None,   # PartitionSpec of the batch axis (see below)
+    grad_accum: str = "f32_sharded",   # or "bf16_local" (see §Perf 4)
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).
+
+    With ``microbatches > 1`` the global batch is split along axis 0 and
+    gradients are accumulated in fp32 through a ``lax.scan`` — per-step live
+    activation memory scales with the microbatch, the standard trick for
+    fitting train_4k's global_batch=256.
+
+    With ``compress_grads`` the accumulated gradient is passed through the
+    int8 error-feedback quantizer (``repro.distributed.compression``): on a
+    multi-pod mesh XLA then moves int8, not fp32, across the pod axis for
+    the gradient all-reduce; the quantization error is carried in opt_state
+    and re-injected next step.
+    """
+    loss_fn = make_loss_fn(model, cfg)
+
+    def compute_grads(params, batch):
+        if microbatches <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, grads
+
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (
+                f"batch {b} not divisible by microbatches {microbatches}"
+            )
+            y = x.reshape((microbatches, b // microbatches) + x.shape[1:])
+            if batch_spec is not None:
+                # keep the batch dim sharded through the reshape — without
+                # this XLA's SPMD partitioner falls back to "involuntary
+                # full rematerialization" (replicate + repartition) on the
+                # microbatch dynamic-slice.  §Perf iteration 2.
+                from jax.sharding import PartitionSpec as P
+
+                spec = P(None, *tuple(batch_spec))
+                y = jax.lax.with_sharding_constraint(
+                    y, P(*(spec[: y.ndim]))
+                )
+            return y
+
+        mb = jax.tree_util.tree_map(split, batch)
+
+        def constrain(tree):
+            if grad_specs is None:
+                return tree
+            return jax.tree_util.tree_map(
+                jax.lax.with_sharding_constraint, tree, grad_specs
+            )
+
+        # Two accumulation strategies (§Perf iterations 2/4):
+        #   f32_sharded — the accumulator is fp32 and ZeRO-2-sharded over
+        #     ('data', TP-axes); each microbatch reduce-scatters into the
+        #     shard.  Minimal memory, µb× collective traffic.
+        #   bf16_local — the accumulator is bf16 and left unconstrained;
+        #     XLA defers the data-axis reduction across the whole scan
+        #     (gradient linearity), paying ONE all-reduce/reduce-scatter
+        #     per step.  ~2× accumulator memory vs f32_sharded, ~µb× less
+        #     collective traffic.  Pick per-cell by its dominant term.
+        acc_dtype = (
+            jnp.bfloat16 if grad_accum == "bf16_local" else jnp.float32
+        )
+        step_constrain = (
+            (lambda t: t) if grad_accum == "bf16_local" else constrain
+        )
+
+        def acc_step(carry, mbatch):
+            loss_acc, grad_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mbatch)
+            grad_acc = step_constrain(jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(acc_dtype), grad_acc, grads
+            ))
+            return (loss_acc + loss, grad_acc), None
+
+        zero_grads = step_constrain(jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, acc_dtype), params
+        ))
+        (loss_sum, grad_sum), _ = jax.lax.scan(
+            acc_step, (jnp.zeros((), jnp.float32), zero_grads), mb
+        )
+        inv = 1.0 / microbatches
+        grad_sum = constrain(jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32) * inv, grad_sum
+        ))
+        return loss_sum * inv, grad_sum
+
+    def train_step(params, opt_state, batch):
+        loss, grads = compute_grads(params, batch)
+        if compress_grads:
+            from repro.distributed.compression import ef_quantize_tree
+
+            grads, new_err = ef_quantize_tree(
+                grads, opt_state.get("ef_error")
+            )
+        new_params, new_opt = adamw_update(opt_cfg, grads, opt_state, params)
+        if compress_grads:
+            new_opt["ef_error"] = new_err
+        metrics = {
+            "loss": loss,
+            "grad_norm": global_norm(grads),
+            "step": new_opt["step"],
+        }
+        return new_params, new_opt, metrics
+
+    return train_step

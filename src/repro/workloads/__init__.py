@@ -1,0 +1,19 @@
+"""Request workloads (§5.2): Poisson, Arena-like bursty, MAF-like diurnal."""
+
+from repro.workloads.arrivals import (
+    ArenaWorkload,
+    MAFWorkload,
+    PoissonWorkload,
+    Request,
+    Workload,
+    make_workload,
+)
+
+__all__ = [
+    "ArenaWorkload",
+    "MAFWorkload",
+    "PoissonWorkload",
+    "Request",
+    "Workload",
+    "make_workload",
+]

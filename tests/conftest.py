@@ -1,0 +1,8 @@
+import os
+import sys
+
+# src/ layout import path (tests run as PYTHONPATH=src pytest tests/)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
+# tests and benches must see 1 device; only the dry-run forces 512.

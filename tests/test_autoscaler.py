@@ -1,0 +1,77 @@
+"""Load autoscaler: N_Can = ceil(R/Q_Tar) with hysteresis (§4)."""
+
+import pytest
+
+from repro.core.autoscaler import ConstantTarget, LoadAutoscaler
+
+
+def test_constant():
+    a = ConstantTarget(5)
+    assert a.target(0.0) == 5
+    a.observe(10.0, 100)
+    assert a.target(10.0) == 5
+
+
+def test_candidate_formula():
+    a = LoadAutoscaler(2.0, window_s=60.0, min_replicas=1)
+    for t in range(60):
+        a.observe(float(t), 6)      # 6 req/s
+    assert a.candidate(60.0) == 3   # ceil(6/2)
+
+
+def test_upscale_needs_sustained_load():
+    a = LoadAutoscaler(
+        1.0, window_s=60.0, upscale_delay_s=120.0, initial_target=1
+    )
+    for t in range(0, 60):
+        a.observe(float(t), 4)
+    assert a.target(59.0) == 1      # diverged but not sustained yet
+    for t in range(60, 200):
+        a.observe(float(t), 4)
+        a.target(float(t))
+    assert a.target(200.0) == 4     # sustained past upscale_delay
+
+
+def test_downscale_slower_than_upscale():
+    a = LoadAutoscaler(
+        1.0, window_s=60.0, upscale_delay_s=60.0,
+        downscale_delay_s=600.0, initial_target=8, min_replicas=1,
+    )
+    # traffic stops
+    t = 0.0
+    while t < 500.0:
+        a.observe(t, 0)
+        assert a.target(t) == 8     # still holding
+        t += 30.0
+    while t < 700.0:
+        a.observe(t, 0)
+        a.target(t)
+        t += 30.0
+    assert a.target(t) == 1
+
+
+def test_flapping_resets_hysteresis():
+    a = LoadAutoscaler(
+        1.0, window_s=30.0, upscale_delay_s=120.0, initial_target=2
+    )
+    # alternate load so the candidate flips direction before the delay
+    # (60 s spacing > 30 s window: quiet periods actually show rate 0)
+    for t in range(0, 600, 60):
+        rate = 6 if (t // 60) % 2 == 0 else 0
+        a.observe(float(t), rate * 30)
+        a.target(float(t))
+    assert a.target(600.0) == 2
+
+
+def test_bounds():
+    a = LoadAutoscaler(0.1, min_replicas=2, max_replicas=5, window_s=10.0)
+    for t in range(10):
+        a.observe(float(t), 1000)
+    assert a.candidate(10.0) == 5
+    a2 = LoadAutoscaler(10.0, min_replicas=2, max_replicas=5)
+    assert a2.candidate(0.0) == 2
+
+
+def test_invalid_qps():
+    with pytest.raises(ValueError):
+        LoadAutoscaler(0.0)

@@ -1,0 +1,167 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned architecture instantiates a REDUCED same-family config and
+runs one forward/train step on CPU asserting output shapes + no NaNs, plus
+a prefill→decode consistency check (the cache path must reproduce the
+full-sequence forward exactly).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, cells_for
+from repro.models import build_model, param_count
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, B=2, S=16):
+    kt, kl, kf = jax.random.split(jax.random.PRNGKey(1), 3)
+    toks = jax.random.randint(kt, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(kl, (B, S), 0, cfg.vocab_size)
+    front = None
+    if cfg.frontend:
+        front = jax.random.normal(
+            kf, (B, cfg.frontend_seq, cfg.d_model), jnp.bfloat16
+        )
+    return toks, labels, front
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_loads(arch):
+    cfg = get_config(arch)
+    n = param_count(build_model(cfg).blueprint())
+    assert n > 1e8          # every assigned arch is >100M params
+    assert cfg.padded_vocab % cfg.vocab_pad_multiple == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_loss(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    toks, labels, front = _inputs(cfg)
+    if cfg.is_encdec:
+        loss = model.loss(params, front, toks, labels)
+    else:
+        loss = model.loss(params, toks, labels, prefix_embed=front)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg, remat=True)
+    params = model.init(KEY)
+    toks, labels, front = _inputs(cfg)
+
+    def loss_fn(p):
+        if cfg.is_encdec:
+            return model.loss(p, front, toks, labels)
+        return model.loss(p, toks, labels, prefix_embed=front)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(
+        float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+        for g in jax.tree_util.tree_leaves(grads)
+    )
+    assert gn > 0 and jnp.isfinite(gn)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_matches_prefill(arch):
+    """Strong cache-correctness check: decode logits == full prefill."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B, S0, S1 = 2, 8, 3
+    toks, _, front = _inputs(cfg, B=B, S=S0 + S1)
+    extra = cfg.frontend_seq if (cfg.frontend and not cfg.is_encdec) else 0
+
+    def fresh_cache():
+        return model.init_cache(B, S0 + S1 + 4 + extra)
+
+    if cfg.is_encdec:
+        lg, cache = model.prefill(params, front, toks[:, :S0],
+                                  fresh_cache())
+    else:
+        lg, cache = model.prefill(params, toks[:, :S0], fresh_cache(),
+                                  prefix_embed=front)
+    assert lg.shape[0] == B and bool(
+        jnp.all(jnp.isfinite(lg.astype(jnp.float32)))
+    )
+    for t in range(S0, S0 + S1):
+        if cfg.is_encdec:
+            ref, _ = model.prefill(params, front, toks[:, : t + 1],
+                                   fresh_cache())
+        else:
+            ref, _ = model.prefill(params, toks[:, : t + 1], fresh_cache(),
+                                   prefix_embed=front)
+        got, cache = model.decode_step(params, toks[:, t : t + 1], cache)
+        ref32 = ref.astype(jnp.float32)
+        err = jnp.abs(ref32 - got.astype(jnp.float32)).max()
+        # bf16 resolution scales with logit magnitude; capacity-based MoE
+        # routing is additionally batch-composition dependent
+        scale = float(jnp.abs(ref32).max())
+        tol = (0.1 if cfg.is_moe else 0.02) + 0.004 * scale
+        assert float(err) <= tol, f"{arch} decode mismatch at t={t}: {err}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_long_context_rule(arch):
+    """long_500k runs only for sub-quadratic archs (assignment rule)."""
+    cfg = get_config(arch)
+    cells = dict(cells_for(cfg))
+    if cfg.family in ("ssm", "hybrid") or cfg.sliding_window:
+        assert cells["long_500k"] == "run"
+    else:
+        assert cells["long_500k"].startswith("skip")
+
+
+def test_sliding_window_ring_buffer():
+    """SWA decode must work past the window with a ring cache."""
+    cfg = get_smoke_config("h2o-danube3-4b")
+    assert cfg.sliding_window is not None and cfg.sliding_window <= 64
+    model = build_model(cfg)
+    params = model.init(KEY)
+    B = 1
+    S = cfg.sliding_window + 12      # go past the window
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                              cfg.vocab_size)
+    cache = model.init_cache(B, S + 8)
+    assert cache["kv"]["k"].shape[2] == cfg.sliding_window  # ring slots
+    lg, cache = model.prefill(params, toks[:, :8], cache)
+    for t in range(8, S):
+        lg, cache = model.decode_step(params, toks[:, t : t + 1], cache)
+        assert bool(jnp.all(jnp.isfinite(lg.astype(jnp.float32))))
+
+
+def test_zamba2_layer_accounting():
+    cfg = get_config("zamba2-7b")
+    assert cfg.hybrid_blocks == 13
+    assert cfg.hybrid_prelude == 3
+    assert cfg.hybrid_mamba_layers == 68
+    assert cfg.hybrid_mamba_layers + cfg.hybrid_blocks == cfg.num_layers
+
+
+def test_paligemma_prefix_lm_attends_bidirectionally():
+    """Prefix tokens must see each other (prefix-LM), unlike causal."""
+    from repro.models.attention import naive_attention
+
+    B, S, H, D = 1, 8, 2, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+    pos = jnp.arange(S)
+    causal = naive_attention(q, k, v, q_pos=pos, kv_pos=pos, causal=True)
+    prefix = naive_attention(
+        q, k, v, q_pos=pos, kv_pos=pos, causal=True, prefix_len=4
+    )
+    # position 0 sees positions 1-3 only under prefix-LM
+    assert not jnp.allclose(causal[:, 0], prefix[:, 0])
+    # last position attends everything either way
+    assert jnp.allclose(causal[:, -1], prefix[:, -1], atol=1e-5)

@@ -1,0 +1,196 @@
+"""SpotHedge policy unit tests (Alg. 1 semantics + Dynamic Fallback)."""
+
+import pytest
+
+from repro.cluster.catalog import default_catalog
+from repro.cluster.instance import Instance, InstanceKind
+from repro.core.policy import (
+    LaunchOnDemand,
+    LaunchSpot,
+    Observation,
+    Terminate,
+    make_policy,
+    registered_policies,
+)
+from repro.core.spothedge import SpotHedgePolicy
+
+
+CAT = default_catalog()
+ZONES = CAT.zones_in_region("us-west-2") + CAT.zones_in_region("us-east-2")
+ITYPE = "p3.2xlarge"
+
+
+def mk_policy(**kw) -> SpotHedgePolicy:
+    p = SpotHedgePolicy(**kw)
+    p.reset(ZONES, CAT, ITYPE)
+    return p
+
+
+def mk_inst(zone: str, kind=InstanceKind.SPOT, t=0.0, ready=True,
+            itype=ITYPE) -> Instance:
+    z = CAT.zone(zone)
+    inst = Instance(
+        zone=zone, region=z.region, cloud=z.cloud, kind=kind, itype=itype,
+        hourly_price=1.0, launched_at=t, cold_start_s=183.0,
+    )
+    if ready:
+        inst.step_to(t + 1000.0)
+    return inst
+
+
+def obs(now=0.0, n_target=4, spot_ready=(), spot_prov=(), od_ready=(),
+        od_prov=()):
+    return Observation(
+        now=now, n_target=n_target,
+        spot_ready=list(spot_ready), spot_provisioning=list(spot_prov),
+        od_ready=list(od_ready), od_provisioning=list(od_prov),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1: Dynamic Placement
+# ---------------------------------------------------------------------------
+
+
+def test_initial_za_is_all_zones():
+    p = mk_policy()
+    assert set(p.available_zones) == {z.name for z in ZONES}
+    assert p.preempting_zones == []
+
+
+def test_preemption_moves_zone_to_zp():
+    p = mk_policy()
+    p.on_preemption("us-west-2a", 10.0)
+    assert "us-west-2a" in p.preempting_zones
+    assert "us-west-2a" not in p.available_zones
+
+
+def test_ready_moves_zone_back_to_za():
+    p = mk_policy()
+    p.on_preemption("us-west-2a", 10.0)
+    p.on_ready("us-west-2a", 400.0)
+    assert "us-west-2a" in p.available_zones
+
+
+def test_launch_failure_also_moves_to_zp():
+    p = mk_policy()
+    p.on_launch_failure("us-west-2b", 5.0)
+    assert "us-west-2b" in p.preempting_zones
+
+
+def test_rebalance_when_za_below_two():
+    """Alg. 1 line 7-9: |Z_A| < 2 recycles Z_P into Z_A."""
+    p = mk_policy()
+    names = [z.name for z in ZONES]
+    for z in names[:-1]:
+        p.on_preemption(z, 1.0)
+    # after pushing all but one into Z_P, the rebalance must have fired
+    assert len(p.available_zones) >= 2
+    assert p.preempting_zones == []
+
+
+def test_select_next_zone_prefers_unoccupied():
+    p = mk_policy()
+    counts = {z.name: 1 for z in ZONES[:-1]}
+    pick = p._select_next_zone(counts, 0.0)
+    assert pick == ZONES[-1].name
+
+
+def test_select_next_zone_prefers_cheap_on_tie():
+    p = mk_policy()
+    pick = p._select_next_zone({}, 0.0)
+    prices = {z.name: CAT.spot_price(ITYPE, z.name) for z in ZONES}
+    assert prices[pick] == min(prices.values())
+
+
+# ---------------------------------------------------------------------------
+# Overprovision + Dynamic Fallback (§3.2)
+# ---------------------------------------------------------------------------
+
+
+def test_initial_decide_launches_spot_goal_and_fallback():
+    p = mk_policy(num_overprovision=2)
+    acts = p.decide(obs(n_target=4))
+    spots = [a for a in acts if isinstance(a, LaunchSpot)]
+    ods = [a for a in acts if isinstance(a, LaunchOnDemand)]
+    assert len(spots) == 6          # N_Tar + N_Extra
+    assert len(ods) == 4            # O = min(N_Tar, N_Tar+N_Extra-0)
+
+
+def test_fallback_formula():
+    p = mk_policy(num_overprovision=2)
+    ready = [mk_inst(f"us-west-2{s}") for s in "abc"]   # S_r = 3
+    acts = p.decide(obs(n_target=4, spot_ready=ready))
+    ods = [a for a in acts if isinstance(a, LaunchOnDemand)]
+    # O = min(4, 4+2-3) = 3
+    assert len(ods) == 3
+
+
+def test_od_scaled_down_when_spot_healthy():
+    p = mk_policy(num_overprovision=2)
+    ready = [mk_inst("us-west-2a") for _ in range(6)]    # S_r = 6
+    od = [mk_inst("us-east-2a", InstanceKind.ON_DEMAND) for _ in range(2)]
+    acts = p.decide(obs(n_target=4, spot_ready=ready, od_ready=od))
+    terms = [a for a in acts if isinstance(a, Terminate)]
+    assert len(terms) == 2          # O = min(4, 6-6) = 0
+
+
+def test_spot_spread_across_zones():
+    """Replacements must not pile onto one zone in a single tick."""
+    p = mk_policy(num_overprovision=2, max_launch_per_zone_per_tick=2)
+    acts = p.decide(obs(n_target=8))
+    spots = [a.zone for a in acts if isinstance(a, LaunchSpot)]
+    from collections import Counter
+
+    assert max(Counter(spots).values()) <= 2
+
+
+def test_warning_discounts_at_risk_replicas():
+    p = mk_policy(num_overprovision=2, warning_ttl_s=240.0)
+    ready = [mk_inst("us-west-2a") for _ in range(6)]
+    p.on_warning("us-west-2a", 100.0)
+    acts = p.decide(obs(now=110.0, n_target=4, spot_ready=ready))
+    ods = [a for a in acts if isinstance(a, LaunchOnDemand)]
+    # all 6 ready replicas are at risk -> S_r_eff = 0 -> O = 4
+    assert len(ods) == 4
+
+
+def test_warning_expires():
+    p = mk_policy(num_overprovision=2, warning_ttl_s=240.0)
+    ready = [mk_inst("us-west-2a") for _ in range(6)]
+    p.on_warning("us-west-2a", 100.0)
+    acts = p.decide(obs(now=500.0, n_target=4, spot_ready=ready))
+    assert not [a for a in acts if isinstance(a, LaunchOnDemand)]
+
+
+def test_no_fallback_variant():
+    p = SpotHedgePolicy(dynamic_ondemand_fallback=False)
+    p.reset(ZONES, CAT, ITYPE)
+    acts = p.decide(obs(n_target=4))
+    assert not [a for a in acts if isinstance(a, LaunchOnDemand)]
+
+
+def test_min_ondemand_floor():
+    p = mk_policy(num_overprovision=2, min_ondemand=1)
+    ready = [mk_inst("us-west-2a") for _ in range(6)]
+    acts = p.decide(obs(n_target=4, spot_ready=ready))
+    ods = [a for a in acts if isinstance(a, LaunchOnDemand)]
+    assert len(ods) == 1
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contains_all():
+    names = registered_policies()
+    for n in ("spothedge", "even_spread", "round_robin", "static_mixture",
+              "aws_spot", "mark_like", "ondemand_only", "spot_only",
+              "omniscient"):
+        assert n in names
+
+
+def test_make_policy_kwargs():
+    p = make_policy("spothedge", num_overprovision=3)
+    assert p.n_extra == 3

@@ -1,0 +1,195 @@
+"""Hypothesis property tests over system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster.catalog import default_catalog
+from repro.cluster.instance import Instance, InstanceKind
+from repro.core.policy import (
+    LaunchOnDemand,
+    LaunchSpot,
+    Observation,
+    Terminate,
+)
+from repro.core.spothedge import SpotHedgePolicy
+from repro.distributed.compression import ef_quantize, quantize_int8
+from repro.kernels.ref import flash_attention_ref
+from repro.models.attention import blockwise_attention, naive_attention
+
+import jax
+import jax.numpy as jnp
+
+CAT = default_catalog()
+ZONES = CAT.zones_in_region("us-west-2") + CAT.zones_in_region("us-east-1")
+
+
+def _ready(zone, n, t=0.0):
+    out = []
+    for _ in range(n):
+        z = CAT.zone(zone)
+        i = Instance(zone=zone, region=z.region, cloud=z.cloud,
+                     kind=InstanceKind.SPOT, itype="p3.2xlarge",
+                     hourly_price=1.0, launched_at=t, cold_start_s=60.0)
+        i.step_to(t + 100.0)
+        out.append(i)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SpotHedge invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_target=st.integers(0, 12),
+    n_extra=st.integers(0, 4),
+    s_ready=st.integers(0, 16),
+    o_ready=st.integers(0, 12),
+)
+def test_fallback_bound_invariant(n_target, n_extra, s_ready, o_ready):
+    """After one decide(), launched OD never exceeds N_Tar and launched
+    spot never exceeds N_Tar + N_Extra (Eq. in §3.2: O(t) <= N_Tar)."""
+    p = SpotHedgePolicy(num_overprovision=n_extra)
+    p.reset(ZONES, CAT, "p3.2xlarge")
+    spot = _ready("us-west-2a", min(s_ready, 8)) + _ready(
+        "us-east-1a", max(0, s_ready - 8)
+    )
+    od = [
+        Instance(zone="us-west-2a", region="us-west-2", cloud="aws",
+                 kind=InstanceKind.ON_DEMAND, itype="p3.2xlarge",
+                 hourly_price=3.0, launched_at=0.0, cold_start_s=60.0)
+        for _ in range(o_ready)
+    ]
+    for i in od:
+        i.step_to(100.0)
+    obs = Observation(now=200.0, n_target=n_target, spot_ready=spot,
+                      spot_provisioning=[], od_ready=od,
+                      od_provisioning=[])
+    acts = p.decide(obs)
+    launched_spot = sum(isinstance(a, LaunchSpot) for a in acts)
+    launched_od = sum(isinstance(a, LaunchOnDemand) for a in acts)
+    terminated = sum(isinstance(a, Terminate) for a in acts)
+    assert len(spot) + launched_spot <= max(n_target + n_extra, len(spot))
+    assert launched_od + len(od) - terminated <= max(n_target, len(od))
+    # zone sanity: every launch goes to an enabled zone
+    names = {z.name for z in ZONES}
+    for a in acts:
+        if isinstance(a, (LaunchSpot, LaunchOnDemand)):
+            assert a.zone in names
+
+
+@settings(max_examples=30, deadline=None)
+@given(events=st.lists(
+    st.tuples(st.sampled_from(["preempt", "fail", "ready"]),
+              st.integers(0, 9)),
+    max_size=60,
+))
+def test_zone_lists_partition_invariant(events):
+    """Z_A and Z_P always partition the enabled zones; |Z_A| >= 2 or all."""
+    p = SpotHedgePolicy()
+    p.reset(ZONES, CAT, "p3.2xlarge")
+    names = [z.name for z in ZONES]
+    for kind, zi in events:
+        z = names[zi % len(names)]
+        if kind == "preempt":
+            p.on_preemption(z, 1.0)
+        elif kind == "fail":
+            p.on_launch_failure(z, 1.0)
+        else:
+            p.on_ready(z, 1.0)
+        za, zp = set(p.available_zones), set(p.preempting_zones)
+        assert za | zp == set(names)
+        assert not (za & zp)
+        assert len(za) >= min(2, len(names))
+
+
+# ---------------------------------------------------------------------------
+# compression invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    scale=st.floats(1e-6, 1e3),
+    n=st.integers(1, 500),
+    seed=st.integers(0, 1000),
+)
+def test_quantize_error_bound(scale, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(x) - np.asarray(q, np.float32) * float(s))
+    assert err.max() <= float(s) * 0.5 + 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+def _ef_helper():
+    pass
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 100), steps=st.integers(1, 12))
+def test_error_feedback_accumulates_to_truth(seed, steps):
+    """sum of transmitted g_hat + final error == sum of true gradients."""
+    rng = np.random.default_rng(seed)
+    gs = [jnp.asarray(rng.standard_normal(32), jnp.float32)
+          for _ in range(steps)]
+    err = None
+    sent = jnp.zeros(32)
+    for g in gs:
+        g_hat, err = ef_quantize(g, err)
+        sent = sent + g_hat
+    total_true = sum(np.asarray(g) for g in gs)
+    np.testing.assert_allclose(
+        np.asarray(sent) + np.asarray(err), total_true, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# attention equivalence (the memory-efficient path is exact)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 50),
+    sq=st.integers(4, 48),
+    heads=st.sampled_from([(2, 1), (4, 2), (4, 4)]),
+    causal=st.booleans(),
+)
+def test_blockwise_equals_naive(seed, sq, heads, causal):
+    H, Kv = heads
+    D = 16
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (1, sq, H, D), jnp.float32)
+    k = jax.random.normal(kk, (1, sq, Kv, D), jnp.float32)
+    v = jax.random.normal(kv, (1, sq, Kv, D), jnp.float32)
+    pos = jnp.arange(sq)
+    got = blockwise_attention(q, k, v, q_pos=pos, kv_pos=pos,
+                              causal=causal, q_block=8, kv_block=8)
+    want = naive_attention(q, k, v, q_pos=pos, kv_pos=pos, causal=causal)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# autoscaler invariant
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rates=st.lists(st.integers(0, 50), min_size=5, max_size=40),
+    q=st.floats(0.5, 5.0),
+)
+def test_autoscaler_within_bounds(rates, q):
+    from repro.core.autoscaler import LoadAutoscaler
+
+    a = LoadAutoscaler(q, min_replicas=1, max_replicas=10, window_s=30.0,
+                       upscale_delay_s=30.0, downscale_delay_s=60.0)
+    t = 0.0
+    for r in rates:
+        a.observe(t, r)
+        n = a.target(t)
+        assert 1 <= n <= 10
+        t += 15.0

@@ -1,0 +1,204 @@
+"""Serving data plane: latency model, replica queueing, LB, e2e sim."""
+
+import numpy as np
+import pytest
+
+from repro.cluster.catalog import default_catalog
+from repro.cluster.instance import Instance, InstanceKind
+from repro.cluster.traces import SpotTrace, synth_correlated_trace
+from repro.configs import get_config
+from repro.core.autoscaler import ConstantTarget
+from repro.core.policy import make_policy
+from repro.serving.latency import LatencyModel
+from repro.serving.load_balancer import (
+    LeastLoadedBalancer,
+    RoundRobinBalancer,
+)
+from repro.serving.replica import Replica, ReplicaState
+from repro.serving.sim import ServingSimulator
+from repro.workloads import make_workload
+from repro.workloads.arrivals import Request
+
+CAT = default_catalog()
+CFG = get_config("llama3.2-1b")
+
+
+def mk_replica(zone="us-west-2a", t=0.0, ready=True, concurrency=2,
+               timeout_s=0.0):
+    z = CAT.zone(zone)
+    inst = Instance(
+        zone=zone, region=z.region, cloud=z.cloud,
+        kind=InstanceKind.SPOT, itype="g5.48xlarge", hourly_price=4.9,
+        launched_at=t, cold_start_s=183.0,
+    )
+    lm = LatencyModel.for_model(CFG, CAT.instance_type("g5.48xlarge"))
+    r = Replica(inst, lm, concurrency=concurrency, timeout_s=timeout_s)
+    if ready:
+        inst.step_to(t + 200.0)
+        r.readiness_probe(t + 200.0)
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Latency model
+# ---------------------------------------------------------------------------
+
+
+def test_latency_monotone_in_tokens():
+    lm = LatencyModel.for_model(CFG, CAT.instance_type("g5.48xlarge"))
+    assert lm.service_s(100, 100) < lm.service_s(1000, 100)
+    assert lm.service_s(100, 100) < lm.service_s(100, 1000)
+
+
+def test_decode_dominates_prefill_for_short_prompts():
+    """Fig. 6a structure: decoding dominates request time."""
+    lm = LatencyModel.for_model(CFG, CAT.instance_type("g5.48xlarge"))
+    assert 44 * lm.decode_s_per_token() > lm.prefill_s(20)
+
+
+def test_processing_dominates_rtt():
+    """§3.1: request processing >> inter-region network latency."""
+    from repro.cluster.catalog import region_rtt_ms
+
+    big = get_config("command-r-35b")
+    lm = LatencyModel.for_model(big, CAT.instance_type("g5.48xlarge"))
+    service = lm.service_s(200, 150)
+    rtt = region_rtt_ms("us-west-2", "eu-central-1") / 1e3
+    assert service > 10 * rtt
+
+
+# ---------------------------------------------------------------------------
+# Replica
+# ---------------------------------------------------------------------------
+
+
+def test_replica_readiness_follows_instance():
+    r = mk_replica(ready=False)
+    assert r.state is ReplicaState.PROVISIONING
+    r.instance.step_to(200.0)
+    assert r.readiness_probe(200.0)
+
+
+def test_replica_completes_requests():
+    r = mk_replica()
+    req = Request(arrival_s=0.0, prompt_tokens=50, output_tokens=20)
+    r.submit(req, 0.0)
+    done, _ = r.step(0.0)
+    assert done == []          # just started
+    done, _ = r.step(1e6)
+    assert len(done) == 1
+    assert done[0][0].id == req.id
+
+
+def test_replica_concurrency_queueing():
+    r = mk_replica(concurrency=1)
+    reqs = [Request(arrival_s=0.0, prompt_tokens=50, output_tokens=50)
+            for _ in range(3)]
+    for q in reqs:
+        r.submit(q, 0.0)
+    r.step(0.0)
+    assert len(r.running) == 1 and len(r.queue) == 2
+
+
+def test_replica_kill_returns_inflight():
+    r = mk_replica()
+    for _ in range(3):
+        r.submit(Request(arrival_s=0.0, prompt_tokens=10,
+                         output_tokens=10), 0.0)
+    r.step(0.0)
+    failed = r.kill()
+    assert len(failed) == 3
+    assert r.state is ReplicaState.DEAD
+
+
+def test_replica_queue_expiry():
+    r = mk_replica(concurrency=1, timeout_s=10.0)
+    r.submit(Request(arrival_s=0.0, prompt_tokens=10, output_tokens=10),
+             0.0)
+    r.submit(Request(arrival_s=0.0, prompt_tokens=10, output_tokens=10),
+             0.0)
+    r.step(0.0)
+    _, expired = r.step(50.0)
+    assert len(expired) == 1
+
+
+# ---------------------------------------------------------------------------
+# Load balancers
+# ---------------------------------------------------------------------------
+
+
+def test_round_robin_cycles():
+    lb = RoundRobinBalancer()
+    reps = [mk_replica(z) for z in
+            ("us-west-2a", "us-west-2b", "us-west-2c")]
+    lb.update_ready(reps)
+    req = Request(arrival_s=0.0, prompt_tokens=1, output_tokens=1)
+    picks = [lb.pick(req, 0.0).zone for _ in range(6)]
+    assert picks[:3] == ["us-west-2a", "us-west-2b", "us-west-2c"]
+
+
+def test_least_loaded_prefers_idle():
+    lb = LeastLoadedBalancer()
+    busy, idle = mk_replica("us-west-2a"), mk_replica("us-west-2b")
+    for _ in range(4):
+        busy.submit(Request(arrival_s=0.0, prompt_tokens=9,
+                            output_tokens=9), 0.0)
+    lb.update_ready([busy, idle])
+    pick = lb.pick(Request(arrival_s=0.0, prompt_tokens=1,
+                           output_tokens=1), 0.0)
+    assert pick is idle
+
+
+def test_lb_returns_none_when_nothing_ready():
+    lb = LeastLoadedBalancer()
+    lb.update_ready([])
+    assert lb.pick(Request(arrival_s=0.0, prompt_tokens=1,
+                           output_tokens=1), 0.0) is None
+
+
+# ---------------------------------------------------------------------------
+# End-to-end serving sim
+# ---------------------------------------------------------------------------
+
+
+def _mini_trace(steps=240):
+    zones = ["us-west-2a", "us-west-2b", "us-east-2a"]
+    zmap = {z: z[:-1] for z in zones}
+    return synth_correlated_trace(zones, zmap, steps=steps, dt=60.0,
+                                  seed=21, max_capacity=4, name="mini")
+
+
+def test_serving_sim_completes_requests():
+    tr = _mini_trace()
+    reqs = make_workload("poisson", rate_per_s=0.5, seed=1).generate(
+        3 * 3600.0
+    )
+    sim = ServingSimulator(
+        tr, make_policy("spothedge"), reqs, CFG, itype="g5.48xlarge",
+        autoscaler=ConstantTarget(2), timeout_s=60.0,
+        workload_name="poisson",
+    )
+    res = sim.run(3 * 3600.0 + 600.0)
+    assert res.n_requests == len(reqs)
+    assert res.n_completed > 0.9 * len(reqs)
+    assert res.failure_rate < 0.1
+    assert res.pct(50) < 60.0
+
+
+def test_spothedge_beats_singleregion_spot_on_failures():
+    tr = _mini_trace(steps=480)
+    reqs = make_workload("poisson", rate_per_s=1.0, seed=2).generate(
+        6 * 3600.0
+    )
+
+    def run(policy, zones=None):
+        sim = ServingSimulator(
+            tr, make_policy(policy), reqs, CFG, itype="g5.48xlarge",
+            autoscaler=ConstantTarget(3), timeout_s=60.0, concurrency=2,
+        )
+        return sim.run(6 * 3600.0 + 600.0)
+
+    hedge = run("spothedge")
+    spread = run("even_spread")
+    assert hedge.failure_rate <= spread.failure_rate
+    assert hedge.availability > spread.availability

@@ -1,0 +1,141 @@
+"""Cluster simulator: FSM, billing, trace replay, policy comparisons."""
+
+import numpy as np
+import pytest
+
+from repro.cluster.catalog import default_catalog
+from repro.cluster.instance import Instance, InstanceKind, InstanceState
+from repro.cluster.simulator import (
+    ClusterSimulator,
+    SimConfig,
+    run_policy_on_trace,
+)
+from repro.cluster.traces import SpotTrace, synth_correlated_trace
+from repro.core.autoscaler import ConstantTarget
+from repro.core.policy import make_policy
+
+
+def mini_trace(steps=200, cap=4):
+    zones = ["us-west-2a", "us-west-2b", "us-east-2a"]
+    zmap = {z: z[:-1] for z in zones}
+    return synth_correlated_trace(
+        zones, zmap, steps=steps, dt=60.0, max_capacity=cap, seed=11,
+        name="mini",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Instance FSM
+# ---------------------------------------------------------------------------
+
+
+def test_instance_lifecycle_and_billing():
+    inst = Instance(
+        zone="us-west-2a", region="us-west-2", cloud="aws",
+        kind=InstanceKind.SPOT, itype="p3.2xlarge", hourly_price=1.0,
+        launched_at=0.0, cold_start_s=183.0,
+    )
+    assert inst.state is InstanceState.PROVISIONING
+    inst.step_to(100.0)
+    assert not inst.is_ready()
+    inst.step_to(183.0)
+    assert inst.is_ready()
+    # billed from launch INCLUDING provisioning (§2.3)
+    assert inst.cost(3600.0) == pytest.approx(1.0)
+    inst.preempt(3600.0)
+    assert inst.state is InstanceState.PREEMPTED
+    assert inst.cost(7200.0) == pytest.approx(1.0)   # billing stopped
+
+
+def test_ondemand_never_preempted():
+    inst = Instance(
+        zone="z", region="r", cloud="aws", kind=InstanceKind.ON_DEMAND,
+        itype="p3.2xlarge", hourly_price=3.0, launched_at=0.0,
+        cold_start_s=10.0,
+    )
+    with pytest.raises(ValueError):
+        inst.preempt(5.0)
+
+
+# ---------------------------------------------------------------------------
+# Simulator mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_spot_launch_respects_capacity():
+    tr = SpotTrace(
+        zones=("us-west-2a",), cap=np.array([[1]] * 10), dt=60.0,
+    )
+    sim = ClusterSimulator(
+        tr, make_policy("even_spread"), autoscaler=ConstantTarget(3),
+        config=SimConfig(control_interval_s=60.0),
+    )
+    res = sim.run(600.0)
+    # capacity 1: only one spot can ever be active
+    assert max(res.ready_spot.max(), 0) <= 1
+    assert res.n_launch_failures > 0
+
+
+def test_capacity_drop_preempts():
+    cap = np.array([[3]] * 5 + [[0]] * 5)
+    tr = SpotTrace(zones=("us-west-2a",), cap=cap, dt=60.0)
+    sim = ClusterSimulator(
+        tr, make_policy("even_spread"), autoscaler=ConstantTarget(3),
+        config=SimConfig(control_interval_s=60.0, cold_start_s=60.0),
+    )
+    res = sim.run(600.0)
+    assert res.n_preemptions == 3
+    assert res.ready_spot[-1] == 0
+
+
+def test_ondemand_only_full_availability():
+    tr = mini_trace()
+    res = run_policy_on_trace(
+        "ondemand_only", tr, n_target=4, control_interval_s=60.0
+    )
+    # only the initial cold start can be unavailable
+    assert res.availability > 0.97
+    assert res.cost_vs_ondemand == pytest.approx(1.0, abs=0.08)
+    assert res.n_preemptions == 0
+
+
+def test_spothedge_beats_baselines_on_availability():
+    tr = mini_trace(steps=800)
+    rs = {
+        name: run_policy_on_trace(
+            name, tr, n_target=4, control_interval_s=30.0
+        )
+        for name in ("spothedge", "even_spread", "round_robin")
+    }
+    assert rs["spothedge"].availability > rs["round_robin"].availability
+    assert rs["round_robin"].availability >= rs["even_spread"].availability
+    assert rs["spothedge"].availability > 0.9
+
+
+def test_spothedge_cheaper_than_ondemand():
+    tr = mini_trace(steps=800)
+    res = run_policy_on_trace(
+        "spothedge", tr, n_target=4, control_interval_s=30.0
+    )
+    assert res.cost_vs_ondemand < 0.8
+
+
+def test_preempt_listener_fires():
+    cap = np.array([[2]] * 5 + [[0]] * 5)
+    tr = SpotTrace(zones=("us-west-2a",), cap=cap, dt=60.0)
+    sim = ClusterSimulator(
+        tr, make_policy("even_spread"), autoscaler=ConstantTarget(2),
+        config=SimConfig(control_interval_s=60.0, cold_start_s=30.0),
+    )
+    seen = []
+    sim.add_preempt_listener(lambda inst, t: seen.append(inst.id))
+    sim.run(600.0)
+    assert len(seen) == 2
+
+
+def test_series_recorded():
+    tr = mini_trace()
+    res = run_policy_on_trace("spothedge", tr, n_target=2,
+                              control_interval_s=60.0)
+    assert len(res.t) == len(res.ready_spot) == len(res.ready_od)
+    assert len(res.t) > 0

@@ -1,0 +1,119 @@
+"""Spot-trace substrate: replay format + the Fig. 3/4/5 statistics."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.cluster.traces import (
+    SpotTrace,
+    TraceLibrary,
+    load_trace,
+    synth_correlated_trace,
+)
+
+
+@pytest.fixture(scope="module")
+def lib():
+    return TraceLibrary()
+
+
+def _regions_of(zones):
+    return [
+        z.rsplit("-", 1)[0] if (z[-1].isdigit() or z[-2] == "-") else z[:-1]
+        for z in zones
+    ]
+
+
+def test_datasets_exist(lib):
+    assert set(lib.names()) >= {"aws-1", "aws-2", "aws-3", "gcp-1",
+                                "cpu-ref"}
+
+
+def test_trace_shapes(lib):
+    tr = lib.get("aws-1")
+    assert tr.cap.shape == (tr.steps, len(tr.zones))
+    assert tr.duration_s == tr.steps * tr.dt
+
+
+def test_capacity_lookup(lib):
+    tr = lib.get("gcp-1")
+    z = tr.zones[0]
+    assert tr.capacity(z, 0.0) == int(tr.cap[0, 0])
+    assert tr.capacity(z, tr.duration_s + 999) == int(tr.cap[-1, 0])
+
+
+def test_gpu_volatility_vs_cpu(lib):
+    """Fig. 4: spot GPUs far less available than spot CPUs."""
+    gpu = lib.get("gcp-1")
+    cpu = lib.get("cpu-ref")
+    gpu_avail = np.mean([gpu.availability(z) for z in gpu.zones])
+    cpu_avail = np.mean([cpu.availability(z) for z in cpu.zones])
+    assert cpu_avail > 0.95
+    assert gpu_avail < 0.85
+
+
+def test_intra_region_correlation_exceeds_inter(lib):
+    """Fig. 3c: preemptions correlate within a region, not across."""
+    tr = lib.get("aws-3")
+    corr = tr.zone_correlation()
+    regions = _regions_of(tr.zones)
+    intra, inter = [], []
+    for i in range(len(tr.zones)):
+        for j in range(i + 1, len(tr.zones)):
+            (intra if regions[i] == regions[j] else inter).append(
+                corr[i, j]
+            )
+    assert np.mean(intra) > 0.15
+    assert np.mean(intra) > 3 * abs(np.mean(inter))
+
+
+def test_region_dropout_rate(lib):
+    """§2.2: AWS-2 sees whole-region dropout ~33% of the time."""
+    tr = lib.get("aws-2")
+    all_down = (tr.cap == 0).all(axis=1).mean()
+    assert 0.2 < all_down < 0.45
+
+
+def test_availability_grows_with_search_space(lib):
+    """Fig. 5: union availability rises as zones/regions are added."""
+    tr = lib.get("aws-3")
+    one = (tr.cap[:, :1] > 0).any(axis=1).mean()
+    three = (tr.cap[:, :3] > 0).any(axis=1).mean()
+    all_z = (tr.cap > 0).any(axis=1).mean()
+    assert one < three < all_z
+    assert all_z > 0.95
+
+
+def test_roundtrip_npz(tmp_path, lib):
+    tr = lib.get("gcp-1")
+    path = os.path.join(tmp_path, "t.npz")
+    tr.save(path)
+    back = SpotTrace.load(path)
+    assert back.zones == tr.zones
+    assert np.array_equal(back.cap, tr.cap)
+
+
+def test_json_format(tmp_path):
+    path = os.path.join(tmp_path, "t.json")
+    with open(path, "w") as f:
+        json.dump(
+            {"dt": 60, "zones": ["a", "b"], "cap": [[1, 0], [2, 2]]}, f
+        )
+    tr = load_trace(path)
+    assert tr.capacity("b", 61.0) == 2
+
+
+def test_slice_zones(lib):
+    tr = lib.get("aws-3")
+    sub = tr.slice_zones(tr.zones[:2])
+    assert sub.cap.shape[1] == 2
+
+
+def test_synth_determinism():
+    zones = ["r1a", "r1b", "r2a"]
+    zmap = {"r1a": "r1", "r1b": "r1", "r2a": "r2"}
+    a = synth_correlated_trace(zones, zmap, steps=500, seed=3)
+    b = synth_correlated_trace(zones, zmap, steps=500, seed=3)
+    assert np.array_equal(a.cap, b.cap)

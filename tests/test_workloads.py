@@ -1,0 +1,54 @@
+"""Workload generators (Poisson / Arena / MAF)."""
+
+import numpy as np
+
+from repro.workloads import make_workload
+from repro.workloads.arrivals import interarrival_stats
+
+
+def test_poisson_rate():
+    wl = make_workload("poisson", rate_per_s=0.5, seed=1)
+    reqs = wl.generate(20_000.0)
+    rate = len(reqs) / 20_000.0
+    assert abs(rate - 0.5) < 0.05
+
+
+def test_poisson_sorted_and_bounded():
+    reqs = make_workload("poisson", rate_per_s=1.0, seed=2).generate(500.0)
+    times = [r.arrival_s for r in reqs]
+    assert times == sorted(times)
+    assert all(0 <= t < 500.0 for t in times)
+    assert all(r.prompt_tokens >= 1 and r.output_tokens >= 1 for r in reqs)
+
+
+def test_arena_burstier_than_poisson():
+    """Fig. 11: Arena interarrivals have higher CV than Poisson (CV=1)."""
+    dur = 100_000.0
+    arena = make_workload("arena", base_rate_per_s=0.5, seed=3).generate(dur)
+    poisson = make_workload("poisson", rate_per_s=0.5, seed=3).generate(dur)
+    cv_a = interarrival_stats(arena)["cv"]
+    cv_p = interarrival_stats(poisson)["cv"]
+    assert cv_a > cv_p
+    assert cv_a > 1.1
+
+
+def test_maf_diurnal():
+    wl = make_workload("maf", base_rate_per_s=0.5, seed=4)
+    reqs = wl.generate(86_400.0)
+    times = np.array([r.arrival_s for r in reqs])
+    # compare midnight-ish vs midday-ish rates
+    night = ((times > 0) & (times < 3 * 3600)).sum()
+    day = ((times > 11 * 3600) & (times < 14 * 3600)).sum()
+    assert day > 1.5 * night
+
+
+def test_determinism():
+    a = make_workload("arena", seed=9).generate(5_000.0)
+    b = make_workload("arena", seed=9).generate(5_000.0)
+    assert [r.arrival_s for r in a] == [r.arrival_s for r in b]
+
+
+def test_unique_ids():
+    reqs = make_workload("poisson", rate_per_s=1.0, seed=5).generate(100.0)
+    ids = [r.id for r in reqs]
+    assert len(set(ids)) == len(ids)
