@@ -1,13 +1,47 @@
-"""Shared helpers for the benchmark modules."""
+"""Shared helpers for the benchmark modules.
+
+Every serving benchmark constructs its runs through the declarative
+service API: build a base :class:`ServiceSpec` dict, derive variants with
+``variant()``, and execute with ``run_service()``.  ``tape()`` generates
+one request tape to replay across all variants of a sweep (so systems see
+identical arrivals).
+"""
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.cluster.traces import SpotTrace
+from repro.serving.sim import ServingResult
+from repro.service import Service, ServiceSpec, build_requests
+from repro.workloads import Request
 
 ART = os.path.join("artifacts", "bench")
+
+
+def variant(spec: ServiceSpec, **field_replacements: Any) -> ServiceSpec:
+    """A spec with top-level fields swapped (frozen dataclass replace)."""
+    return dataclasses.replace(spec, **field_replacements)
+
+
+def tape(spec: ServiceSpec) -> List[Request]:
+    """The spec's request tape, for replay across a sweep's variants."""
+    return build_requests(spec)
+
+
+def run_service(
+    spec: ServiceSpec | Dict[str, Any],
+    *,
+    trace: Optional[SpotTrace] = None,
+    requests: Optional[Sequence[Request]] = None,
+    duration_s: Optional[float] = None,
+) -> ServingResult:
+    """Compile + run one declared service; returns its ServingResult."""
+    return Service(spec, trace=trace, requests=requests).run(duration_s)
 
 
 def save(name: str, rows: List[Dict[str, Any]]) -> str:

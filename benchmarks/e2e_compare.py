@@ -2,35 +2,67 @@
 
 SkyServe(SpotHedge) vs ASG(static mixture) vs AWSSpot(single-region even
 spread) vs MArk-like, serving the command-r-35b (Llama-2-70B-class) replica
-on g5.48xlarge under the Arena workload.  Single-region baselines are
-restricted to us-west-2 zones (the paper's setup); SpotHedge gets all
-regions of the trace.  Two scenario groups: Spot Available vs Spot
-Volatile (trace windows selected by spot obtainability, like §5.1).
+on g5.48xlarge under the Arena workload.  Each system is a ServiceSpec
+variant of one base spec: single-region baselines get an ``any_of``
+resource filter pinning them to us-west-2 (the paper's setup); SpotHedge
+gets all regions of the trace.  Two scenario groups: Spot Available vs
+Spot Volatile (trace windows selected by spot obtainability, like §5.1).
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from typing import Dict, List
 
-import numpy as np
-
-from benchmarks.common import emit_csv, save
-from repro.cluster.simulator import SimConfig
+from benchmarks.common import emit_csv, run_service, save, tape, variant
 from repro.cluster.traces import SpotTrace, TraceLibrary
-from repro.configs import get_config
-from repro.core.autoscaler import LoadAutoscaler
-from repro.core.policy import make_policy
-from repro.serving.sim import ServingSimulator
-from repro.workloads import make_workload
+from repro.service import (
+    PlacementFilter,
+    ReplicaPolicySpec,
+    ResourceSpec,
+    spec_from_dict,
+)
 
 SYSTEMS = {
-    # system -> (policy, kwargs, single_region_only)
-    "skyserve": ("spothedge", {}, False),
-    "asg": ("static_mixture", {"od_fraction": 0.1}, True),
-    "aws_spot": ("aws_spot", {}, True),
-    "mark": ("mark_like", {}, True),
-    "ondemand": ("ondemand_only", {}, False),
+    # system -> (policy spec, single_region_only)
+    "skyserve": (ReplicaPolicySpec(name="spothedge"), False),
+    "asg": (
+        ReplicaPolicySpec(name="static_mixture", args={"od_fraction": 0.1}),
+        True,
+    ),
+    "aws_spot": (ReplicaPolicySpec(name="aws_spot"), True),
+    "mark": (ReplicaPolicySpec(name="mark_like"), True),
+    "ondemand": (ReplicaPolicySpec(name="ondemand_only"), False),
 }
+
+WEST_ONLY = ResourceSpec(
+    instance_type="g5.48xlarge",
+    any_of=(PlacementFilter(region="us-west-2"),),
+)
+
+
+def _base_spec(hours: float):
+    return spec_from_dict({
+        "name": "e2e-compare",
+        "model": "command-r-35b",
+        "trace": "aws-3",                # 9 zones, 3+ regions
+        "resources": {"instance_type": "g5.48xlarge"},
+        "autoscaler": {
+            "kind": "load",
+            "target": 5,
+            "qps_per_replica": 0.6,
+            "min_replicas": 2,
+            "max_replicas": 14,
+            "upscale_delay_s": 30.0,
+            "downscale_delay_s": 600.0,
+        },
+        "workload": {"kind": "arena", "rate_per_s": 2.5, "seed": 7},
+        "sim": {
+            "duration_hours": hours,
+            "control_interval_s": 15.0,
+            "timeout_s": 100.0,
+            "concurrency": 4,
+        },
+    })
 
 
 def _window(tr: SpotTrace, hours: float, volatile: bool) -> SpotTrace:
@@ -56,33 +88,23 @@ def _window(tr: SpotTrace, hours: float, volatile: bool) -> SpotTrace:
 def run(hours: float = 8.0, quick: bool = False) -> List[Dict]:
     if quick:
         hours = 4.0
-    tr_full = TraceLibrary().get("aws-3")   # 9 zones, 3+ regions
-    cfg = get_config("command-r-35b")
+    base = _base_spec(hours)
+    tr_full = TraceLibrary().get(base.trace)
     rows: List[Dict] = []
     for volatile in (False, True):
         tr = _window(tr_full, hours, volatile)
-        wl = make_workload("arena", base_rate_per_s=2.5, seed=7)
-        reqs = wl.generate(hours * 3600 - 600)
+        reqs = tape(base)       # identical arrivals for every system
         scenario = "volatile" if volatile else "available"
-        for system, (pol, kw, single_region) in SYSTEMS.items():
-            zones = None
-            trace = tr
-            if single_region:
-                west = [z for z in tr.zones if z.startswith("us-west-2")]
-                trace = tr.slice_zones(west)
-            sim = ServingSimulator(
-                trace, make_policy(pol, **kw), reqs, cfg,
-                itype="g5.48xlarge",
-                autoscaler=LoadAutoscaler(
-                    0.6, min_replicas=2, max_replicas=14,
-                    upscale_delay_s=30.0, downscale_delay_s=600.0,
-                    initial_target=5,
-                ),
-                timeout_s=100.0, workload_name="arena", concurrency=4,
-                sim_config=SimConfig(itype="g5.48xlarge",
-                                     control_interval_s=15.0),
+        for system, (policy, single_region) in SYSTEMS.items():
+            spec = variant(
+                base,
+                name=f"e2e-{system}",
+                replica_policy=policy,
+                resources=WEST_ONLY if single_region else base.resources,
             )
-            res = sim.run(hours * 3600)
+            res = run_service(
+                spec, trace=tr, requests=reqs, duration_s=hours * 3600
+            )
             rows.append(
                 {
                     "scenario": scenario,

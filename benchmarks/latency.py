@@ -1,46 +1,48 @@
-"""Fig. 15: service latency across traces × workloads × policies."""
+"""Fig. 15: service latency across traces × workloads × policies — each
+cell one ServiceSpec variant of a single base spec."""
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List
 
-from benchmarks.common import emit_csv, save
-from repro.cluster.traces import TraceLibrary
-from repro.configs import get_config
-from repro.core.autoscaler import ConstantTarget
-from repro.core.policy import make_policy
-from repro.serving.sim import ServingSimulator
-from repro.workloads import make_workload
+from benchmarks.common import emit_csv, run_service, save, tape, variant
+from repro.service import ReplicaPolicySpec, spec_from_dict
 
 POLICIES = ("even_spread", "round_robin", "spothedge")
 WORKLOADS = ("poisson", "arena", "maf")
 TRACES = ("aws-1", "aws-2", "gcp-1")
-ITYPES = {"aws-1": "g5.48xlarge", "aws-2": "g5.48xlarge",
-          "gcp-1": "g5.48xlarge"}
 
 
 def run(hours: float = 6.0, quick: bool = False) -> List[Dict]:
     if quick:
         hours = 3.0
-    lib = TraceLibrary()
-    cfg = get_config("llama3.2-1b")
+    base = spec_from_dict({
+        "name": "latency-sweep",
+        "model": "llama3.2-1b",
+        "trace": "aws-1",
+        "resources": {"instance_type": "g5.48xlarge"},
+        "autoscaler": {"kind": "constant", "target": 4},
+        "workload": {"kind": "poisson", "rate_per_s": 1.2, "seed": 5},
+        "sim": {"duration_hours": hours, "timeout_s": 60.0,
+                "concurrency": 2},
+    })
     rows: List[Dict] = []
     for tname in TRACES:
-        tr = lib.get(tname)
         for wname in WORKLOADS:
-            wl = make_workload(wname, seed=5, **(
-                {"rate_per_s": 1.2} if wname == "poisson"
-                else {"base_rate_per_s": 1.2}
-            ))
-            reqs = wl.generate(hours * 3600 - 600)
+            wl_spec = variant(
+                base,
+                trace=tname,
+                workload=dataclasses.replace(base.workload, kind=wname),
+            )
+            reqs = tape(wl_spec)    # one tape per (trace, workload) cell
             for pol in POLICIES:
-                sim = ServingSimulator(
-                    tr, make_policy(pol), reqs, cfg,
-                    itype=ITYPES[tname],
-                    autoscaler=ConstantTarget(4),
-                    timeout_s=60.0, workload_name=wname, concurrency=2,
+                res = run_service(
+                    variant(wl_spec,
+                            replica_policy=ReplicaPolicySpec(name=pol)),
+                    requests=reqs,
+                    duration_s=hours * 3600,
                 )
-                res = sim.run(hours * 3600)
                 rows.append(
                     {
                         "trace": tname,

@@ -1,39 +1,41 @@
-"""Fig. 14c/d: sensitivity to N_Extra (overprovision) and cold start d."""
+"""Fig. 14c/d: sensitivity to N_Extra (overprovision) and cold start d —
+each point a ServiceSpec variant sharing one request tape."""
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List
 
-from benchmarks.common import emit_csv, save
-from repro.cluster.simulator import SimConfig
-from repro.cluster.traces import TraceLibrary
-from repro.configs import get_config
-from repro.core.autoscaler import ConstantTarget
-from repro.core.policy import make_policy
-from repro.serving.sim import ServingSimulator
-from repro.workloads import make_workload
+from benchmarks.common import emit_csv, run_service, save, tape, variant
+from repro.service import ReplicaPolicySpec, spec_from_dict
 
 
 def run(hours: float = 6.0, quick: bool = False) -> List[Dict]:
     if quick:
         hours = 3.0
-    tr = TraceLibrary().get("gcp-1")
-    cfg = get_config("llama3.2-1b")
-    wl = make_workload("poisson", rate_per_s=1.0, seed=3)
-    reqs = wl.generate(hours * 3600 - 600)
+    base = spec_from_dict({
+        "name": "sensitivity",
+        "model": "llama3.2-1b",
+        "trace": "gcp-1",
+        "resources": {"instance_type": "a2-ultragpu-4g"},
+        "replica_policy": {"name": "spothedge", "overprovision": 2},
+        "autoscaler": {"kind": "constant", "target": 4},
+        "workload": {"kind": "poisson", "rate_per_s": 1.0, "seed": 3},
+        "sim": {"duration_hours": hours, "timeout_s": 60.0,
+                "concurrency": 2, "control_interval_s": 15.0},
+    })
+    reqs = tape(base)
     rows: List[Dict] = []
 
     def one(n_extra: int, cold: float) -> Dict:
-        sim = ServingSimulator(
-            tr, make_policy("spothedge", num_overprovision=n_extra), reqs,
-            cfg, itype="a2-ultragpu-4g",
-            autoscaler=ConstantTarget(4), timeout_s=60.0, concurrency=2,
-            workload_name="poisson",
-            sim_config=SimConfig(itype="a2-ultragpu-4g",
-                                 cold_start_s=cold,
-                                 control_interval_s=15.0),
+        spec = variant(
+            base,
+            replica_policy=ReplicaPolicySpec(
+                name="spothedge", overprovision=n_extra
+            ),
+            sim=dataclasses.replace(base.sim, cold_start_s=cold),
         )
-        res = sim.run(hours * 3600)
+        res = run_service(spec, requests=reqs, duration_s=hours * 3600)
         return {
             "p50_s": round(res.pct(50), 3),
             "p99_s": round(res.pct(99), 3),

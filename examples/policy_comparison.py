@@ -1,5 +1,6 @@
 """Policy comparison across all four spot traces (Fig. 14 in miniature),
-including the Omniscient ILP lower bound.
+including the Omniscient ILP lower bound — every run declared as a
+ServiceSpec variant of one base spec.
 
     PYTHONPATH=src python examples/policy_comparison.py [--full]
 """
@@ -7,23 +8,39 @@ including the Omniscient ILP lower bound.
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.cluster.simulator import run_policy_on_trace
-from repro.cluster.traces import TraceLibrary
+import dataclasses
+
+from repro.service import ReplicaPolicySpec, Service, spec_from_dict
 
 FULL = "--full" in sys.argv
 ITYPES = {"aws-1": "p3.2xlarge", "aws-2": "p3.2xlarge",
           "aws-3": "p3.2xlarge", "gcp-1": "a2-ultragpu-4g"}
 
-lib = TraceLibrary()
+BASE = spec_from_dict({
+    "name": "policy-comparison",
+    "model": "llama3.2-1b",
+    "autoscaler": {"kind": "constant", "target": 4},
+    "workload": {"kind": "none"},
+    "sim": {"duration_hours": 96.0, "control_interval_s": 30.0},
+})
+
 print(f"{'policy':>16s} {'trace':>7s} {'avail':>7s} {'cost/OD':>8s} "
       f"{'preempt':>8s}")
 for tname in ("aws-1", "aws-2", "aws-3", "gcp-1"):
-    tr = lib.get(tname)
-    dur = None if FULL else min(tr.duration_s, 4 * 86_400.0)
     for pol in ("even_spread", "round_robin", "spothedge", "omniscient"):
-        res = run_policy_on_trace(
-            pol, tr, n_target=4, itype=ITYPES[tname],
-            control_interval_s=30.0, duration_s=dur,
+        spec = dataclasses.replace(
+            BASE,
+            trace=tname,
+            resources=dataclasses.replace(
+                BASE.resources, instance_type=ITYPES[tname]
+            ),
+            replica_policy=ReplicaPolicySpec(name=pol),
         )
+        svc = Service(spec)
+        trace = svc.resolve().trace
+        dur = trace.duration_s if FULL else min(
+            trace.duration_s, 4 * 86_400.0
+        )
+        res = svc.run(dur)
         print(f"{pol:>16s} {tname:>7s} {res.availability:7.2%} "
               f"{res.cost_vs_ondemand:8.2%} {res.n_preemptions:8d}")

@@ -16,6 +16,18 @@ import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.models import build_model
+from repro.service import spec_from_dict
+
+# The fleet is declared the same way the simulated paths are — one spec;
+# the live driver reads the model + replica count from it.
+SPEC = spec_from_dict({
+    "name": "serve-llm-live",
+    "model": "llama3.2-1b",
+    "trace": "aws-3",
+    "replica_policy": {"name": "spothedge"},
+    "autoscaler": {"kind": "constant", "target": 2},
+    "workload": {"kind": "none"},
+})
 
 
 class LiveReplica:
@@ -66,11 +78,11 @@ class LiveReplica:
 
 
 def main():
-    cfg = get_smoke_config("llama3.2-1b")
+    cfg = get_smoke_config(SPEC.model)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     reps = [LiveReplica(f"replica-{i}", cfg, model, params)
-            for i in range(2)]
+            for i in range(SPEC.autoscaler.target)]
 
     rng = jax.random.PRNGKey(7)
     prompts = {

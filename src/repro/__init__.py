@@ -16,6 +16,8 @@ Package layout
                        gradient compression.
 ``repro.serving``      The JAX data plane: inference engine, replicas, load
                        balancer, service controller.
+``repro.service``      The declarative front door: ``ServiceSpec`` (paper
+                       Listing 1) -> loader -> builder -> ``Service.run()``.
 ``repro.training``     Optimizer + train-step factory (remat, microbatching).
 ``repro.kernels``      Pallas TPU kernels (flash attention, flash decode,
                        selective scan, MoE grouped matmul) + jnp oracles.

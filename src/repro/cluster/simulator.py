@@ -33,6 +33,8 @@ from repro.cluster.instance import Instance, InstanceKind, InstanceState
 from repro.cluster.traces import SpotTrace
 from repro.core.autoscaler import Autoscaler, ConstantTarget
 from repro.core.policy import (
+    ControllerEvent,
+    EventKind,
     LaunchOnDemand,
     LaunchSpot,
     Observation,
@@ -138,8 +140,27 @@ class ClusterSimulator:
         self._series_nt: List[int] = []
         self._preempt_listeners: List[Callable[[Instance, float], None]] = []
         self._ready_listeners: List[Callable[[Instance, float], None]] = []
+        #: structured transition log (kept when record_series is on; the
+        #: serving facade surfaces it through Service.status()).
+        self.events: List[ControllerEvent] = []
 
         self.policy.reset(self.zones, self.catalog, self.config.itype)
+
+    # -- event delivery ---------------------------------------------------
+    def _emit(
+        self,
+        kind: EventKind,
+        zone: str,
+        instance_id: Optional[int] = None,
+    ) -> ControllerEvent:
+        """Deliver one structured transition to the policy (and log it)."""
+        event = ControllerEvent(
+            kind=kind, zone=zone, now=self.now, instance_id=instance_id
+        )
+        if self.config.record_series:
+            self.events.append(event)
+        self.policy.on_event(event)
+        return event
 
     # -- listener registration (serving layer) --------------------------
     def add_preempt_listener(
@@ -191,7 +212,7 @@ class ClusterSimulator:
             in_use = len(self.active_spot(zone_name))
             if in_use + 1 > cap:
                 self.n_launch_failures += 1
-                self.policy.on_launch_failure(zone_name, self.now)
+                self._emit(EventKind.LAUNCH_FAILURE, zone_name)
                 return None
             price = self.catalog.spot_price(self.config.itype, zone_name)
             self.n_spot_launches += 1
@@ -227,7 +248,7 @@ class ClusterSimulator:
             for inst in active[:excess]:
                 inst.preempt(self.now)
                 self.n_preemptions += 1
-                self.policy.on_preemption(zone_name, self.now)
+                self._emit(EventKind.PREEMPTION, zone_name, inst.id)
                 for fn in self._preempt_listeners:
                     fn(inst, self.now)
                 self._retire(inst)
@@ -252,7 +273,7 @@ class ClusterSimulator:
                     for inst in self.active_spot(zone_name):
                         if inst.warned_at is None:
                             inst.warned_at = self.now
-                    self.policy.on_warning(zone_name, self.now)
+                    self._emit(EventKind.WARNING, zone_name)
 
     def _retire(self, inst: Instance) -> None:
         """Move a dead instance out of the scan list; bank its cost."""
@@ -273,7 +294,7 @@ class ClusterSimulator:
                 inst.step_to(self.now)
                 if inst.is_ready() and not was_ready:
                     if inst.is_spot():
-                        self.policy.on_ready(inst.zone, self.now)
+                        self._emit(EventKind.READY, inst.zone, inst.id)
                     for fn in self._ready_listeners:
                         fn(inst, self.now)
 

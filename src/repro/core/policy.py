@@ -11,7 +11,8 @@ oracle (offline ILP) does.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
+import enum
+from typing import Dict, List, Optional, Sequence, TYPE_CHECKING, Union
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.cluster.catalog import Catalog, Zone
@@ -38,7 +39,38 @@ class Terminate:
     instance_id: int
 
 
-Action = object  # union of the three dataclasses above
+#: The controller contract: a policy's ``decide`` returns a list of these.
+Action = Union[LaunchSpot, LaunchOnDemand, Terminate]
+
+
+# ---------------------------------------------------------------------------
+# Controller events
+# ---------------------------------------------------------------------------
+
+
+class EventKind(enum.Enum):
+    """Cluster transitions delivered to the policy between control ticks."""
+
+    PREEMPTION = "preemption"
+    LAUNCH_FAILURE = "launch_failure"
+    READY = "ready"
+    WARNING = "warning"
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerEvent:
+    """A structured cluster transition (preempt / launch-fail / ready /
+    preemption-warning) as the controller observed it.
+
+    ``instance_id`` is set when the event concerns a specific instance
+    (preemption, ready); zone-level events (launch failure, warning) leave
+    it ``None``.
+    """
+
+    kind: EventKind
+    zone: str
+    now: float
+    instance_id: Optional[int] = None
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +153,21 @@ class Policy:
         self._fail_at = {}
 
     # -- event hooks (between control ticks) ----------------------------
+    def on_event(self, event: ControllerEvent) -> None:
+        """Structured event entry point: the controller delivers every
+        cluster transition through here.  Dispatches to the per-kind hooks,
+        which remain the subclass override points."""
+        if event.kind is EventKind.PREEMPTION:
+            self.on_preemption(event.zone, event.now)
+        elif event.kind is EventKind.LAUNCH_FAILURE:
+            self.on_launch_failure(event.zone, event.now)
+        elif event.kind is EventKind.READY:
+            self.on_ready(event.zone, event.now)
+        elif event.kind is EventKind.WARNING:
+            self.on_warning(event.zone, event.now)
+        else:  # pragma: no cover - exhaustive over EventKind
+            raise TypeError(f"unknown controller event {event!r}")
+
     def on_preemption(self, zone: str, now: float) -> None:
         """A spot replica in ``zone`` was preempted."""
 

@@ -3,27 +3,59 @@
     PYTHONPATH=src python -m repro.launch.serve --arch command-r-35b \
         --trace aws-3 --policy spothedge --hours 4
 
+    # or run a declarative service file (paper Listing 1):
+    PYTHONPATH=src python -m repro.launch.serve --spec examples/service.yaml
+
 Runs the full control plane (SpotHedge placement + dynamic fallback +
 autoscaler + least-loaded LB) against a recorded spot trace with the
-roofline-derived data-plane latency model — the §5.1 methodology.  Swap
-``--live`` (reduced arch) to serve real tokens from in-process JAX engines
-(see examples/serve_llm.py for the live path).
+roofline-derived data-plane latency model — the §5.1 methodology.  Every
+run is a :class:`repro.service.ServiceSpec`; the CLI flags are just a spec
+built for you.  Swap ``--live`` (reduced arch) to serve real tokens from
+in-process JAX engines (see examples/serve_llm.py for the live path).
 """
 
 import argparse
+import json
 import sys
 
-from repro.cluster.simulator import SimConfig
-from repro.cluster.traces import TraceLibrary
-from repro.configs import ARCH_IDS, get_config
-from repro.core.autoscaler import LoadAutoscaler
-from repro.core.policy import make_policy, registered_policies
-from repro.serving.sim import ServingSimulator
-from repro.workloads import make_workload
+from repro.configs import ARCH_IDS
+from repro.core.policy import registered_policies
+from repro.service import Service, load_spec
+
+
+def spec_from_args(args: argparse.Namespace) -> dict:
+    """The CLI's kwarg soup, expressed as the one true spec dict."""
+    return {
+        "name": f"serve-{args.arch}",
+        "model": args.arch,
+        "trace": args.trace,
+        "resources": {"instance_type": args.itype},
+        "replica_policy": {"name": args.policy},
+        "autoscaler": {
+            "kind": "load",
+            "target": 4,
+            "qps_per_replica": args.qps_per_replica,
+            "min_replicas": 2,
+            "max_replicas": 12,
+            "upscale_delay_s": 60.0,
+            "downscale_delay_s": 600.0,
+        },
+        "workload": {"kind": args.workload, "rate_per_s": args.rate,
+                     "seed": 11},
+        "sim": {
+            "duration_hours": args.hours,
+            "control_interval_s": 15.0,
+            "timeout_s": args.timeout,
+            "concurrency": 4,
+        },
+    }
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", default=None, metavar="FILE",
+                    help="run a service spec file (.yaml/.json); "
+                    "other flags are ignored")
     ap.add_argument("--arch", choices=ARCH_IDS, default="command-r-35b")
     ap.add_argument("--trace", default="aws-3")
     ap.add_argument("--policy", default="spothedge",
@@ -35,30 +67,28 @@ def main(argv=None) -> int:
     ap.add_argument("--rate", type=float, default=2.0)
     ap.add_argument("--qps-per-replica", type=float, default=0.8)
     ap.add_argument("--timeout", type=float, default=100.0)
+    ap.add_argument("--status", action="store_true",
+                    help="print the resolved service status as JSON")
     args = ap.parse_args(argv)
 
-    trace = TraceLibrary().get(args.trace)
-    cfg = get_config(args.arch)
-    kw = {"rate_per_s": args.rate} if args.workload == "poisson" else {
-        "base_rate_per_s": args.rate
-    }
-    reqs = make_workload(args.workload, seed=11, **kw).generate(
-        args.hours * 3600 - 600
-    )
-    print(f"[serve] {args.policy} serving {cfg.name} on {args.itype}: "
-          f"{len(reqs)} requests / {args.hours}h over trace {trace.name}")
-    sim = ServingSimulator(
-        trace, make_policy(args.policy), reqs, cfg, itype=args.itype,
-        autoscaler=LoadAutoscaler(
-            args.qps_per_replica, min_replicas=2, max_replicas=12,
-            upscale_delay_s=60.0, downscale_delay_s=600.0,
-            initial_target=4,
-        ),
-        timeout_s=args.timeout, workload_name=args.workload, concurrency=4,
-        sim_config=SimConfig(itype=args.itype, control_interval_s=15.0),
-    )
-    res = sim.run(args.hours * 3600)
+    from repro.service import SpecError
+
+    try:
+        spec = load_spec(args.spec if args.spec else spec_from_args(args))
+        svc = Service(spec)
+        resolved = svc.resolve()
+        print(f"[serve] {spec.replica_policy.name} serving "
+              f"{resolved.model_config.name} on "
+              f"{spec.resources.instance_type}: {len(resolved.requests)} "
+              f"requests / {spec.sim.duration_hours:g}h over trace "
+              f"{resolved.trace.name} ({len(resolved.zones)} zones)")
+        res = svc.run()
+    except SpecError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
     print(res.summary())
+    if args.status:
+        print(json.dumps(svc.status(), indent=1, default=float))
     return 0
 
 

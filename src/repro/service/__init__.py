@@ -1,0 +1,57 @@
+"""Declarative service API — the repo's single front door.
+
+``ServiceSpec`` (frozen dataclasses mirroring the paper's Listing 1) declares
+*what* to serve; ``Service`` compiles and runs it:
+
+    from repro.service import Service
+
+    Service.from_yaml("service.yaml").run().summary()
+
+Layers: ``spec`` (typed schema) -> ``loader`` (dict/JSON/YAML + validation)
+-> ``builder`` (spec -> trace/policy/autoscaler/LB/simulator) -> ``service``
+(the run/status facade).
+"""
+
+from repro.service.builder import (
+    ResolvedService,
+    build_requests,
+    build_service,
+    resolve_zones,
+)
+from repro.service.loader import (
+    load_spec,
+    spec_from_dict,
+    spec_from_json,
+    spec_from_yaml,
+)
+from repro.service.service import Service
+from repro.service.spec import (
+    AutoscalerSpec,
+    PlacementFilter,
+    ReplicaPolicySpec,
+    ResourceSpec,
+    ServiceSpec,
+    SimSpec,
+    SpecError,
+    WorkloadSpec,
+)
+
+__all__ = [
+    "AutoscalerSpec",
+    "PlacementFilter",
+    "ReplicaPolicySpec",
+    "ResolvedService",
+    "ResourceSpec",
+    "Service",
+    "ServiceSpec",
+    "SimSpec",
+    "SpecError",
+    "WorkloadSpec",
+    "build_requests",
+    "build_service",
+    "load_spec",
+    "resolve_zones",
+    "spec_from_dict",
+    "spec_from_json",
+    "spec_from_yaml",
+]

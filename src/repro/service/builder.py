@@ -1,0 +1,218 @@
+"""Compile a :class:`ServiceSpec` into the runnable simulator stack.
+
+``build_service`` is the only place in the repo that assembles the
+trace × catalog × policy × autoscaler × LB × :class:`ServingSimulator`
+pipeline; every driver (launch/serve, examples, benchmarks) goes through
+it, so a new scenario is a spec file, not a new driver.
+
+Overrides exist for the pieces an experiment may precompute: a trace
+window sliced by hand (``trace=``), a shared request tape (``requests=``),
+or a custom catalog.  Everything else is derived from the spec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.cluster.catalog import Catalog, default_catalog
+from repro.cluster.simulator import SimConfig
+from repro.cluster.traces import SpotTrace, load_trace
+from repro.configs import get_config
+from repro.core.autoscaler import Autoscaler, ConstantTarget, LoadAutoscaler
+from repro.core.policy import Policy, make_policy
+from repro.models.config import ModelConfig
+from repro.serving.load_balancer import (
+    LeastLoadedBalancer,
+    LoadBalancer,
+    RoundRobinBalancer,
+)
+from repro.serving.sim import ServingSimulator
+from repro.service.spec import ResourceSpec, ServiceSpec, SpecError
+from repro.workloads import Request, make_workload
+
+__all__ = [
+    "ResolvedService",
+    "build_requests",
+    "build_service",
+    "resolve_zones",
+]
+
+
+def resolve_zones(
+    resources: ResourceSpec, trace: SpotTrace, catalog: Catalog
+) -> List[str]:
+    """Zones of ``trace`` that pass the ``any_of``/``exclude`` filter.
+
+    Zones the catalog does not know are skipped (a trace file may carry
+    zones outside the default universe); an empty result is a spec error.
+    """
+    out: List[str] = []
+    for name in trace.zones:
+        try:
+            z = catalog.zone(name)
+        except KeyError:
+            continue
+        if resources.allows(z.cloud, z.region, z.name):
+            out.append(name)
+    if not out:
+        raise SpecError(
+            f"resources filter matches no zone of trace "
+            f"{trace.name!r} (trace zones: {list(trace.zones)}); "
+            "loosen any_of / exclude_zones"
+        )
+    return out
+
+
+def _build_policy(spec: ServiceSpec, trace: SpotTrace,
+                  catalog: Catalog) -> Policy:
+    name = spec.replica_policy.name
+    try:
+        policy = make_policy(name, **spec.replica_policy.policy_kwargs())
+    except TypeError as e:
+        raise SpecError(
+            f"replica_policy {name!r} rejected its knobs "
+            f"{spec.replica_policy.policy_kwargs()}: {e}"
+        ) from e
+    if name == "omniscient":
+        # the oracle needs the full trace ahead of time (offline ILP)
+        from repro.core.omniscient import solve_omniscient
+
+        itype = spec.resources.instance_type
+        k = (
+            catalog.od_price(itype, trace.zones[0])
+            / catalog.spot_price(itype, trace.zones[0])
+        )
+        policy.attach_schedule(
+            solve_omniscient(
+                trace,
+                n_target=spec.autoscaler.target,
+                cold_start_s=spec.sim.cold_start_s,
+                k_ratio=k,
+                avail_target=0.99,
+            )
+        )
+    return policy
+
+
+def _build_autoscaler(spec: ServiceSpec) -> Autoscaler:
+    a = spec.autoscaler
+    if a.kind == "constant":
+        return ConstantTarget(a.target)
+    return LoadAutoscaler(
+        a.qps_per_replica,
+        window_s=a.window_s,
+        upscale_delay_s=a.upscale_delay_s,
+        downscale_delay_s=a.downscale_delay_s,
+        min_replicas=a.min_replicas,
+        max_replicas=a.max_replicas,
+        initial_target=a.target,
+    )
+
+
+def _build_lb(spec: ServiceSpec) -> LoadBalancer:
+    if spec.load_balancer == "round_robin":
+        return RoundRobinBalancer()
+    return LeastLoadedBalancer()
+
+
+def build_requests(spec: ServiceSpec) -> List[Request]:
+    """Generate the spec's request tape (empty for ``workload: none``).
+
+    Exposed so experiment sweeps can generate one tape and replay it
+    across several service variants (``Service(..., requests=tape)``)."""
+    w = spec.workload
+    if w.kind == "none":
+        return []
+    kw = dict(w.args)
+    kw["seed"] = w.seed
+    rate_key = "rate_per_s" if w.kind == "poisson" else "base_rate_per_s"
+    kw.setdefault(rate_key, w.rate_per_s)
+    horizon = spec.sim.duration_s - spec.sim.drain_s
+    if horizon <= 0:
+        raise SpecError(
+            f"sim.duration_hours ({spec.sim.duration_hours:g}h = "
+            f"{spec.sim.duration_s:g}s) must exceed sim.drain_s "
+            f"({spec.sim.drain_s:g}s) to leave room for arrivals; "
+            "lengthen the run or shrink drain_s"
+        )
+    return make_workload(w.kind, **kw).generate(horizon)
+
+
+@dataclasses.dataclass
+class ResolvedService:
+    """Everything ``build_service`` wired together, inspectable."""
+
+    spec: ServiceSpec
+    trace: SpotTrace
+    catalog: Catalog
+    model_config: ModelConfig
+    zones: List[str]
+    policy: Policy
+    autoscaler: Autoscaler
+    load_balancer: LoadBalancer
+    requests: List[Request]
+    simulator: ServingSimulator
+
+
+def build_service(
+    spec: ServiceSpec,
+    *,
+    trace: Optional[SpotTrace] = None,
+    catalog: Optional[Catalog] = None,
+    requests: Optional[Sequence[Request]] = None,
+) -> ResolvedService:
+    """Spec -> resolved, runnable service (fresh simulator each call)."""
+    catalog = catalog or default_catalog()
+    trace = trace if trace is not None else load_trace(spec.trace)
+    zones = resolve_zones(spec.resources, trace, catalog)
+    if tuple(zones) != tuple(trace.zones):
+        trace = trace.slice_zones(zones)
+
+    policy = _build_policy(spec, trace, catalog)
+    autoscaler = _build_autoscaler(spec)
+    lb = _build_lb(spec)
+    reqs = list(requests) if requests is not None else build_requests(spec)
+
+    sim_spec = spec.sim
+    # with no request path there is nothing to do between control ticks —
+    # step the request loop at the control cadence instead of 1 Hz
+    sub_step = (
+        max(sim_spec.sub_step_s, sim_spec.control_interval_s)
+        if spec.workload.kind == "none" and requests is None
+        else sim_spec.sub_step_s
+    )
+    simulator = ServingSimulator(
+        trace,
+        policy,
+        reqs,
+        get_config(spec.model),
+        itype=spec.resources.instance_type,
+        catalog=catalog,
+        autoscaler=autoscaler,
+        lb=lb,
+        sim_config=SimConfig(
+            itype=spec.resources.instance_type,
+            cold_start_s=sim_spec.cold_start_s,
+            control_interval_s=sim_spec.control_interval_s,
+            warning_enabled=sim_spec.warning_enabled,
+            seed=sim_spec.seed,
+            record_series=sim_spec.record_series,
+        ),
+        timeout_s=sim_spec.timeout_s,
+        sub_step_s=sub_step,
+        workload_name=spec.workload.kind,
+        concurrency=sim_spec.concurrency,
+    )
+    return ResolvedService(
+        spec=spec,
+        trace=trace,
+        catalog=catalog,
+        model_config=simulator.cfg,
+        zones=zones,
+        policy=policy,
+        autoscaler=autoscaler,
+        load_balancer=lb,
+        requests=reqs,
+        simulator=simulator,
+    )

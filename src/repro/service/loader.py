@@ -1,0 +1,190 @@
+"""Build :class:`ServiceSpec` objects from dicts, JSON, or YAML.
+
+The loader is strict: unknown keys, wrong section types, and out-of-range
+values all raise :class:`SpecError` with the offending field named, so a
+typo in a service file fails at load time, not three hours into a replay.
+
+YAML support uses PyYAML when present; without it, JSON files and dicts
+still work (``SpecError`` explains the gap if a ``.yaml`` file is passed).
+The top-level ``service:`` wrapper key is optional, mirroring the paper's
+Listing 1 layout.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Mapping, Optional
+
+from repro.service.spec import (
+    AutoscalerSpec,
+    PlacementFilter,
+    ReplicaPolicySpec,
+    ResourceSpec,
+    ServiceSpec,
+    SimSpec,
+    SpecError,
+    WorkloadSpec,
+)
+
+try:  # optional dependency — gate, never require
+    import yaml as _yaml
+except ImportError:  # pragma: no cover - environment-dependent
+    _yaml = None
+
+__all__ = ["spec_from_dict", "spec_from_json", "spec_from_yaml", "load_spec"]
+
+
+def _read_spec_file(path: str) -> str:
+    try:
+        with open(path) as f:
+            return f.read()
+    except OSError as e:
+        raise SpecError(f"cannot read service spec file {path!r}: {e}") from e
+
+
+def _section(d: Mapping[str, Any], key: str) -> Mapping[str, Any]:
+    sub = d.get(key, {})
+    if not isinstance(sub, Mapping):
+        raise SpecError(
+            f"section {key!r} must be a mapping, got {type(sub).__name__}"
+        )
+    return sub
+
+
+def _check_keys(d: Mapping[str, Any], allowed: tuple, where: str) -> None:
+    unknown = set(d) - set(allowed)
+    if unknown:
+        raise SpecError(
+            f"{where} has unknown keys {sorted(unknown)}; "
+            f"allowed: {sorted(allowed)}"
+        )
+
+
+def _pick(d: Mapping[str, Any], cls, where: str) -> dict:
+    """kwargs for a spec dataclass from a section dict, key-checked."""
+    import dataclasses
+
+    fields = tuple(f.name for f in dataclasses.fields(cls))
+    _check_keys(d, fields, where)
+    return dict(d)
+
+
+def _resources_from_dict(d: Mapping[str, Any]) -> ResourceSpec:
+    _check_keys(
+        d, ("instance_type", "any_of", "exclude_zones"), "resources"
+    )
+    kw: dict = {}
+    if "instance_type" in d:
+        kw["instance_type"] = d["instance_type"]
+    if "exclude_zones" in d:
+        kw["exclude_zones"] = tuple(d["exclude_zones"])
+    any_of = d.get("any_of")
+    if any_of is not None:
+        if not isinstance(any_of, (list, tuple)):
+            raise SpecError(
+                "resources.any_of must be a list of "
+                "{cloud|region|zone} filters"
+            )
+        kw["any_of"] = tuple(
+            PlacementFilter.from_dict(e if isinstance(e, Mapping) else
+                                      _bad_any_of(e))
+            for e in any_of
+        )
+    return ResourceSpec(**kw)
+
+
+def _bad_any_of(entry: Any) -> Mapping[str, Any]:
+    raise SpecError(
+        f"resources.any_of entries must be mappings, got {entry!r}"
+    )
+
+
+def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
+    """Build and validate a :class:`ServiceSpec` from a plain dict."""
+    if not isinstance(d, Mapping):
+        raise SpecError(
+            f"service spec must be a mapping, got {type(d).__name__}"
+        )
+    if "service" in d and isinstance(d["service"], Mapping):
+        d = d["service"]
+    _check_keys(
+        d,
+        ("name", "model", "trace", "resources", "replica_policy",
+         "autoscaler", "workload", "sim", "load_balancer"),
+        "service spec",
+    )
+    try:
+        # only keys present in the dict are passed on, so the dataclass
+        # defaults stay the single source of truth
+        kw: dict = {k: d[k] for k in ("name", "model", "trace",
+                                      "load_balancer") if k in d}
+        kw["resources"] = _resources_from_dict(_section(d, "resources"))
+        kw["replica_policy"] = ReplicaPolicySpec(
+            **_pick(_section(d, "replica_policy"), ReplicaPolicySpec,
+                    "replica_policy")
+        )
+        kw["autoscaler"] = AutoscalerSpec(
+            **_pick(_section(d, "autoscaler"), AutoscalerSpec, "autoscaler")
+        )
+        kw["workload"] = WorkloadSpec(
+            **_pick(_section(d, "workload"), WorkloadSpec, "workload")
+        )
+        kw["sim"] = SimSpec(**_pick(_section(d, "sim"), SimSpec, "sim"))
+        spec = ServiceSpec(**kw)
+    except TypeError as e:
+        # e.g. a list where a scalar belongs — surface as a spec error
+        raise SpecError(f"malformed service spec: {e}") from e
+    return spec.validate()
+
+
+def spec_from_json(path_or_text: str) -> ServiceSpec:
+    """Load a spec from a JSON file path or a JSON document string."""
+    text = path_or_text
+    if not path_or_text.lstrip().startswith("{"):
+        text = _read_spec_file(path_or_text)
+    try:
+        d = json.loads(text)
+    except json.JSONDecodeError as e:
+        raise SpecError(f"invalid JSON service spec: {e}") from e
+    return spec_from_dict(d)
+
+
+def spec_from_yaml(path_or_text: str) -> ServiceSpec:
+    """Load a spec from a YAML file path or a YAML document string."""
+    if _yaml is None:  # pragma: no cover - environment-dependent
+        raise SpecError(
+            "PyYAML is not installed; install the 'yaml' extra or use a "
+            "JSON spec (spec_from_json / a .json file)"
+        )
+    text = path_or_text
+    if "\n" not in path_or_text and not path_or_text.lstrip().startswith(
+        ("{", "service:")
+    ):
+        text = _read_spec_file(path_or_text)
+    try:
+        d = _yaml.safe_load(text)
+    except _yaml.YAMLError as e:
+        raise SpecError(f"invalid YAML service spec: {e}") from e
+    if d is None:
+        raise SpecError("empty YAML service spec")
+    return spec_from_dict(d)
+
+
+def load_spec(source: Any) -> ServiceSpec:
+    """Polymorphic entry: ServiceSpec | dict | path (.yaml/.yml/.json)."""
+    if isinstance(source, ServiceSpec):
+        return source.validate()
+    if isinstance(source, Mapping):
+        return spec_from_dict(source)
+    if isinstance(source, str):
+        if source.endswith((".yaml", ".yml")):
+            return spec_from_yaml(source)
+        if source.endswith(".json"):
+            return spec_from_json(source)
+        raise SpecError(
+            f"cannot infer spec format of {source!r}; expected a dict, a "
+            "ServiceSpec, or a path ending in .yaml/.yml/.json"
+        )
+    raise SpecError(
+        f"cannot build a ServiceSpec from {type(source).__name__}"
+    )

@@ -1,0 +1,453 @@
+"""Declarative service specification — the paper's Listing 1 as typed data.
+
+A :class:`ServiceSpec` is the single front door to this repro: it names the
+model, the spot trace, the ``any_of`` resource filter, the replica policy
+(SpotHedge or a baseline) with its knobs, the autoscaler, the request
+workload and the simulation horizon.  ``repro.service.builder`` compiles a
+spec into the resolved Catalog/SpotTrace/Policy/Autoscaler/LoadBalancer/
+ServingSimulator stack; ``repro.service.Service`` runs it.
+
+All specs are frozen dataclasses with ``to_dict`` round-trips, so a spec is
+equally a Python literal, a JSON object, or a YAML file:
+
+    service:
+      name: chat
+      model: command-r-35b
+      trace: aws-3
+      resources:
+        instance_type: g5.48xlarge
+        any_of:
+          - region: us-west-2
+          - region: us-east-1
+      replica_policy:
+        name: spothedge
+        overprovision: 2
+      autoscaler:
+        kind: load
+        target: 4
+        qps_per_replica: 0.8
+
+Local shape/positivity validation lives in ``__post_init__``; cross-registry
+checks (is the policy registered? does the trace exist?) live in
+``ServiceSpec.validate`` so module import stays cheap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+__all__ = [
+    "SpecError",
+    "PlacementFilter",
+    "ResourceSpec",
+    "ReplicaPolicySpec",
+    "AutoscalerSpec",
+    "WorkloadSpec",
+    "SimSpec",
+    "ServiceSpec",
+]
+
+
+class SpecError(ValueError):
+    """A service spec is malformed; the message says which field and why."""
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise SpecError(msg)
+
+
+def _clean(d: Dict[str, Any]) -> Dict[str, Any]:
+    """Drop ``None`` values so to_dict output stays minimal and re-loadable."""
+    return {k: v for k, v in d.items() if v is not None}
+
+
+# ---------------------------------------------------------------------------
+# Resources (Listing 1: resources + any_of)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementFilter:
+    """One ``any_of`` entry: a zone matches if every set field matches.
+
+    An entry with no fields set matches everything (Listing 1 uses bare
+    ``cloud: aws`` entries; ``{}`` would mean "anywhere").
+    """
+
+    cloud: Optional[str] = None
+    region: Optional[str] = None
+    zone: Optional[str] = None
+
+    def matches(self, cloud: str, region: str, zone: str) -> bool:
+        return (
+            (self.cloud is None or self.cloud == cloud)
+            and (self.region is None or self.region == region)
+            and (self.zone is None or self.zone == zone)
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _clean(dataclasses.asdict(self))
+
+    @staticmethod
+    def from_dict(d: Mapping[str, Any]) -> "PlacementFilter":
+        unknown = set(d) - {"cloud", "region", "zone"}
+        _require(
+            not unknown,
+            f"any_of entry has unknown keys {sorted(unknown)}; "
+            "allowed: cloud, region, zone",
+        )
+        return PlacementFilter(
+            cloud=d.get("cloud"), region=d.get("region"), zone=d.get("zone")
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceSpec:
+    """What to run on, and where placement is allowed.
+
+    ``any_of=None`` (the default) leaves every zone of the trace enabled;
+    an explicit empty tuple is rejected — it would match nothing.
+    """
+
+    instance_type: str = "p3.2xlarge"
+    any_of: Optional[Tuple[PlacementFilter, ...]] = None
+    exclude_zones: Tuple[str, ...] = ()
+
+    def __post_init__(self) -> None:
+        _require(
+            bool(self.instance_type),
+            "resources.instance_type must be a non-empty string",
+        )
+        if self.any_of is not None:
+            _require(
+                len(self.any_of) > 0,
+                "resources.any_of is empty — it would match no zones; "
+                "omit the field to allow every zone of the trace, or add "
+                "at least one {cloud|region|zone} filter",
+            )
+
+    def allows(self, cloud: str, region: str, zone: str) -> bool:
+        if zone in self.exclude_zones:
+            return False
+        if self.any_of is None:
+            return True
+        return any(f.matches(cloud, region, zone) for f in self.any_of)
+
+    def to_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {"instance_type": self.instance_type}
+        if self.any_of is not None:
+            out["any_of"] = [f.to_dict() for f in self.any_of]
+        if self.exclude_zones:
+            out["exclude_zones"] = list(self.exclude_zones)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Replica policy (SpotHedge + baselines)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaPolicySpec:
+    """Which placement policy manages the fleet, and its knobs.
+
+    ``overprovision`` / ``dynamic_fallback`` / ``min_ondemand`` are the
+    paper's §3 knobs (``N_Extra``, Dynamic Fallback, the §4 custom-policy
+    on-demand floor); they map onto SpotHedge-family constructor args.
+    ``args`` passes any further keyword verbatim to the policy constructor
+    (e.g. ``od_fraction`` for ``static_mixture``).
+    """
+
+    name: str = "spothedge"
+    overprovision: Optional[int] = None
+    dynamic_fallback: Optional[bool] = None
+    min_ondemand: Optional[int] = None
+    args: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        _require(bool(self.name), "replica_policy.name must be set")
+        if self.overprovision is not None:
+            _require(
+                self.overprovision >= 0,
+                f"replica_policy.overprovision must be >= 0, "
+                f"got {self.overprovision}",
+            )
+        if self.min_ondemand is not None:
+            _require(
+                self.min_ondemand >= 0,
+                f"replica_policy.min_ondemand must be >= 0, "
+                f"got {self.min_ondemand}",
+            )
+
+    def policy_kwargs(self) -> Dict[str, Any]:
+        """Constructor kwargs for ``make_policy`` (set fields only)."""
+        kw: Dict[str, Any] = dict(self.args)
+        if self.overprovision is not None:
+            kw["num_overprovision"] = self.overprovision
+        if self.dynamic_fallback is not None:
+            kw["dynamic_ondemand_fallback"] = self.dynamic_fallback
+        if self.min_ondemand is not None:
+            kw["min_ondemand"] = self.min_ondemand
+        return kw
+
+    def to_dict(self) -> Dict[str, Any]:
+        out = _clean(
+            {
+                "name": self.name,
+                "overprovision": self.overprovision,
+                "dynamic_fallback": self.dynamic_fallback,
+                "min_ondemand": self.min_ondemand,
+            }
+        )
+        if self.args:
+            out["args"] = dict(self.args)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoscalerSpec:
+    """``kind="constant"`` pins N_Tar to ``target``; ``kind="load"`` is the
+    paper's QPS autoscaler with hysteresis, with ``target`` as the initial
+    N_Tar."""
+
+    kind: str = "constant"
+    target: int = 4
+    qps_per_replica: float = 0.8
+    min_replicas: int = 1
+    max_replicas: int = 12
+    window_s: float = 60.0
+    upscale_delay_s: float = 300.0
+    downscale_delay_s: float = 1200.0
+
+    def __post_init__(self) -> None:
+        _require(
+            self.kind in ("constant", "load"),
+            f"autoscaler.kind must be 'constant' or 'load', "
+            f"got {self.kind!r}",
+        )
+        _require(
+            self.target >= 0,
+            f"autoscaler.target must be >= 0, got {self.target}",
+        )
+        _require(
+            self.qps_per_replica > 0,
+            f"autoscaler.qps_per_replica must be positive, "
+            f"got {self.qps_per_replica}",
+        )
+        _require(
+            0 < self.min_replicas <= self.max_replicas,
+            f"autoscaler replica bounds invalid: need "
+            f"0 < min_replicas <= max_replicas, got "
+            f"[{self.min_replicas}, {self.max_replicas}]",
+        )
+        if self.kind == "load":
+            _require(
+                self.min_replicas <= self.target <= self.max_replicas,
+                f"autoscaler.target (initial N_Tar) must lie within "
+                f"[min_replicas, max_replicas] = "
+                f"[{self.min_replicas}, {self.max_replicas}] for "
+                f"kind='load', got {self.target}",
+            )
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Workload
+# ---------------------------------------------------------------------------
+
+
+WORKLOAD_KINDS = ("poisson", "arena", "maf", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Request arrival process.  ``kind="none"`` runs the control plane
+    against the trace with no request path (availability/cost only — the
+    Fig. 14 setting)."""
+
+    kind: str = "poisson"
+    rate_per_s: float = 0.5
+    seed: int = 0
+    args: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        _require(
+            self.kind in WORKLOAD_KINDS,
+            f"workload.kind must be one of {list(WORKLOAD_KINDS)}, "
+            f"got {self.kind!r}",
+        )
+        _require(
+            self.rate_per_s > 0,
+            f"workload.rate_per_s must be positive, got {self.rate_per_s}",
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "kind": self.kind,
+            "rate_per_s": self.rate_per_s,
+            "seed": self.seed,
+        }
+        if self.args:
+            out["args"] = dict(self.args)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Simulation horizon / fabric knobs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SimSpec:
+    """Simulation fabric: horizon, cold start, control cadence, SLO."""
+
+    duration_hours: float = 4.0
+    cold_start_s: float = 183.0
+    control_interval_s: float = 15.0
+    timeout_s: float = 100.0
+    sub_step_s: float = 1.0
+    concurrency: Optional[int] = 4
+    drain_s: float = 600.0        # stop generating arrivals this long
+    # before the horizon so in-flight work can finish
+    warning_enabled: bool = True
+    seed: int = 0
+    record_series: bool = True
+
+    def __post_init__(self) -> None:
+        _require(
+            self.duration_hours > 0,
+            f"sim.duration_hours must be positive, got {self.duration_hours}",
+        )
+        _require(
+            self.cold_start_s >= 0,
+            f"sim.cold_start_s must be >= 0, got {self.cold_start_s}",
+        )
+        _require(
+            self.control_interval_s > 0,
+            f"sim.control_interval_s must be positive, "
+            f"got {self.control_interval_s}",
+        )
+        _require(
+            self.timeout_s > 0,
+            f"sim.timeout_s must be positive, got {self.timeout_s}",
+        )
+        _require(
+            self.sub_step_s > 0,
+            f"sim.sub_step_s must be positive, got {self.sub_step_s}",
+        )
+        _require(
+            self.drain_s >= 0,
+            f"sim.drain_s must be >= 0, got {self.drain_s}",
+        )
+        if self.concurrency is not None:
+            _require(
+                self.concurrency > 0,
+                f"sim.concurrency must be positive, got {self.concurrency}",
+            )
+
+    @property
+    def duration_s(self) -> float:
+        return self.duration_hours * 3600.0
+
+    def to_dict(self) -> Dict[str, Any]:
+        # keep explicit None (concurrency: null == model-derived) so the
+        # dict round-trips exactly
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# The service spec
+# ---------------------------------------------------------------------------
+
+
+LB_NAMES = ("least_loaded", "round_robin")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceSpec:
+    """The complete declarative description of one service run."""
+
+    name: str = "service"
+    model: str = "llama3.2-1b"
+    trace: str = "aws-3"
+    resources: ResourceSpec = dataclasses.field(default_factory=ResourceSpec)
+    replica_policy: ReplicaPolicySpec = dataclasses.field(
+        default_factory=ReplicaPolicySpec
+    )
+    autoscaler: AutoscalerSpec = dataclasses.field(
+        default_factory=AutoscalerSpec
+    )
+    workload: WorkloadSpec = dataclasses.field(default_factory=WorkloadSpec)
+    sim: SimSpec = dataclasses.field(default_factory=SimSpec)
+    load_balancer: str = "least_loaded"
+
+    def __post_init__(self) -> None:
+        _require(bool(self.name), "service.name must be set")
+        _require(bool(self.model), "service.model must be set")
+        _require(bool(self.trace), "service.trace must be set")
+        _require(
+            self.load_balancer in LB_NAMES,
+            f"service.load_balancer must be one of {list(LB_NAMES)}, "
+            f"got {self.load_balancer!r}",
+        )
+
+    # -- cross-registry validation (deferred imports keep this cheap) -----
+    def validate(self) -> "ServiceSpec":
+        """Check fields against the live registries (policies, archs,
+        instance types, named traces).  Returns self for chaining."""
+        from repro.cluster.catalog import default_catalog
+        from repro.cluster.traces import TraceLibrary
+        from repro.configs import ARCH_IDS
+        from repro.core.policy import registered_policies
+
+        policies = registered_policies()
+        _require(
+            self.replica_policy.name in policies,
+            f"unknown replica_policy.name {self.replica_policy.name!r}; "
+            f"registered policies: {policies}",
+        )
+        _require(
+            self.model in ARCH_IDS,
+            f"unknown model {self.model!r}; available: {ARCH_IDS}",
+        )
+        catalog = default_catalog()
+        try:
+            catalog.instance_type(self.resources.instance_type)
+        except KeyError:
+            known = sorted(t.name for t in catalog.instance_types)
+            raise SpecError(
+                f"unknown resources.instance_type "
+                f"{self.resources.instance_type!r}; catalog has {known}"
+            ) from None
+        is_file = self.trace.endswith((".json", ".npz"))
+        if not is_file:
+            names = TraceLibrary().names()
+            _require(
+                self.trace in names,
+                f"unknown trace {self.trace!r}; named datasets: {names} "
+                "(or pass a .json/.npz trace file path)",
+            )
+        return self
+
+    # -- (de)serialization ------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "model": self.model,
+            "trace": self.trace,
+            "resources": self.resources.to_dict(),
+            "replica_policy": self.replica_policy.to_dict(),
+            "autoscaler": self.autoscaler.to_dict(),
+            "workload": self.workload.to_dict(),
+            "sim": self.sim.to_dict(),
+            "load_balancer": self.load_balancer,
+        }

@@ -51,6 +51,8 @@ class ServingResult:
     od_cost: float
     cost_vs_ondemand: float
     availability: float
+    n_preemptions: int = 0
+    n_launch_failures: int = 0
 
     @property
     def failure_rate(self) -> float:
@@ -109,10 +111,11 @@ class ServingSimulator:
 
         self.replicas: Dict[int, Replica] = {}
 
-        cfg_sim = sim_config or SimConfig(
-            itype=itype, control_interval_s=15.0
-        )
-        cfg_sim.itype = itype
+        if sim_config is None:
+            cfg_sim = SimConfig(itype=itype, control_interval_s=15.0)
+        else:
+            # never mutate the caller's (possibly shared) SimConfig
+            cfg_sim = dataclasses.replace(sim_config, itype=itype)
         self.cluster = ClusterSimulator(
             trace,
             policy,
@@ -223,4 +226,6 @@ class ServingSimulator:
             od_cost=base.od_cost,
             cost_vs_ondemand=base.cost_vs_ondemand,
             availability=base.availability,
+            n_preemptions=base.n_preemptions,
+            n_launch_failures=base.n_launch_failures,
         )

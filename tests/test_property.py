@@ -1,6 +1,10 @@
 """Hypothesis property tests over system invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.cluster.catalog import default_catalog
