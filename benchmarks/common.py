@@ -2,9 +2,10 @@
 
 Every serving benchmark constructs its runs through the declarative
 service API: build a base :class:`ServiceSpec` dict, derive variants with
-``variant()``, and execute with ``run_service()``.  ``tape()`` generates
-one request tape to replay across all variants of a sweep (so systems see
-identical arrivals).
+``variant()``, and execute through the scenario-matrix engine
+(:func:`run_suite` / :class:`repro.experiments.ScenarioSuite`) so all
+drivers share one execution path.  Scenarios of one sweep replay
+identical request tapes via ``Scenario.tape_key``.
 """
 
 from __future__ import annotations
@@ -16,8 +17,9 @@ import time
 from typing import Any, Dict, List, Optional, Sequence
 
 from repro.cluster.traces import SpotTrace
+from repro.experiments import ScenarioReport, ScenarioSuite
 from repro.serving.sim import ServingResult
-from repro.service import Service, ServiceSpec, build_requests
+from repro.service import Service, ServiceSpec
 from repro.workloads import Request
 
 ART = os.path.join("artifacts", "bench")
@@ -26,11 +28,6 @@ ART = os.path.join("artifacts", "bench")
 def variant(spec: ServiceSpec, **field_replacements: Any) -> ServiceSpec:
     """A spec with top-level fields swapped (frozen dataclass replace)."""
     return dataclasses.replace(spec, **field_replacements)
-
-
-def tape(spec: ServiceSpec) -> List[Request]:
-    """The spec's request tape, for replay across a sweep's variants."""
-    return build_requests(spec)
 
 
 def run_service(
@@ -42,6 +39,21 @@ def run_service(
 ) -> ServingResult:
     """Compile + run one declared service; returns its ServingResult."""
     return Service(spec, trace=trace, requests=requests).run(duration_s)
+
+
+def run_suite(
+    suite: ScenarioSuite,
+    *,
+    engine: Optional[str] = None,
+    workers: "int | str | None" = "auto",
+    save: bool = True,
+) -> ScenarioReport:
+    """Run a scenario suite with the bench defaults and save its report."""
+    return suite.run(
+        engine=engine,
+        workers=workers,
+        save_to=ART if save else None,
+    )
 
 
 def save(name: str, rows: List[Dict[str, Any]]) -> str:

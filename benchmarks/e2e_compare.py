@@ -3,18 +3,21 @@
 SkyServe(SpotHedge) vs ASG(static mixture) vs AWSSpot(single-region even
 spread) vs MArk-like, serving the command-r-35b (Llama-2-70B-class) replica
 on g5.48xlarge under the Arena workload.  Each system is a ServiceSpec
-variant of one base spec: single-region baselines get an ``any_of``
-resource filter pinning them to us-west-2 (the paper's setup); SpotHedge
-gets all regions of the trace.  Two scenario groups: Spot Available vs
-Spot Volatile (trace windows selected by spot obtainability, like §5.1).
+variant of one base spec; the whole matrix is a
+:class:`repro.experiments.ScenarioSuite` (single-region baselines get an
+``any_of`` resource filter pinning them to us-west-2, like the paper's
+setup).  Two scenario groups: Spot Available vs Spot Volatile (trace
+windows selected by spot obtainability, like §5.1).  All systems of a
+group replay one request tape.
 """
 
 from __future__ import annotations
 
 from typing import Dict, List
 
-from benchmarks.common import emit_csv, run_service, save, tape, variant
+from benchmarks.common import emit_csv, run_suite, save, variant
 from repro.cluster.traces import SpotTrace, TraceLibrary
+from repro.experiments import Scenario, ScenarioSuite
 from repro.service import (
     PlacementFilter,
     ReplicaPolicySpec,
@@ -85,16 +88,14 @@ def _window(tr: SpotTrace, hours: float, volatile: bool) -> SpotTrace:
     )
 
 
-def run(hours: float = 8.0, quick: bool = False) -> List[Dict]:
-    if quick:
-        hours = 4.0
+def build_suite(hours: float) -> ScenarioSuite:
+    """The policy × trace-window matrix as one ScenarioSuite."""
     base = _base_spec(hours)
     tr_full = TraceLibrary().get(base.trace)
-    rows: List[Dict] = []
+    scenarios: List[Scenario] = []
     for volatile in (False, True):
         tr = _window(tr_full, hours, volatile)
-        reqs = tape(base)       # identical arrivals for every system
-        scenario = "volatile" if volatile else "available"
+        group = "volatile" if volatile else "available"
         for system, (policy, single_region) in SYSTEMS.items():
             spec = variant(
                 base,
@@ -102,22 +103,36 @@ def run(hours: float = 8.0, quick: bool = False) -> List[Dict]:
                 replica_policy=policy,
                 resources=WEST_ONLY if single_region else base.resources,
             )
-            res = run_service(
-                spec, trace=tr, requests=reqs, duration_s=hours * 3600
+            scenarios.append(
+                Scenario(
+                    labels={"scenario": group, "system": system},
+                    spec=spec,
+                    trace=tr,
+                    # identical arrivals for every system of a group
+                    tape_key=("e2e", hours),
+                )
             )
-            rows.append(
-                {
-                    "scenario": scenario,
-                    "system": system,
-                    "p50_s": round(res.pct(50), 2),
-                    "p90_s": round(res.pct(90), 2),
-                    "p99_s": round(res.pct(99), 2),
-                    "failure_rate": round(res.failure_rate, 4),
-                    "cost_vs_od": round(res.cost_vs_ondemand, 4),
-                    "availability": round(res.availability, 4),
-                    "n_requests": res.n_requests,
-                }
-            )
+    return ScenarioSuite(scenarios, name="e2e_compare")
+
+
+def run(hours: float = 8.0, quick: bool = False) -> List[Dict]:
+    if quick:
+        hours = 4.0
+    report = run_suite(build_suite(hours))
+    rows: List[Dict] = [
+        {
+            "scenario": c.labels["scenario"],
+            "system": c.labels["system"],
+            "p50_s": round(c.p50_s, 2),
+            "p90_s": round(c.p90_s, 2),
+            "p99_s": round(c.p99_s, 2),
+            "failure_rate": round(c.failure_rate, 4),
+            "cost_vs_od": round(c.cost_vs_ondemand, 4),
+            "availability": round(c.availability, 4),
+            "n_requests": c.n_requests,
+        }
+        for c in report.cells
+    ]
     save("e2e_compare", rows)
     emit_csv("e2e_compare", rows)
 

@@ -1,0 +1,92 @@
+"""Engine speedup: the e2e_compare policy×trace matrix, legacy vs vector.
+
+Runs the exact same scenario matrix as ``benchmarks/e2e_compare.py``
+three ways and records wall-clock to ``artifacts/bench/engine_speedup.json``:
+
+* ``legacy`` — the per-request object simulator (``serving/sim.py``),
+  serial: the pre-PR execution path;
+* ``vector`` — the NumPy engine (``serving/engine.py``), serial: isolates
+  the hot-path speedup;
+* ``vector_parallel`` — the NumPy engine with the suite fanning cells out
+  over worker processes: the shipped default path for scenario matrices.
+
+The metrics of all three are asserted identical cell-for-cell (the
+differential guarantee, end-to-end), so the timing comparison is
+apples-to-apples.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import emit_csv, save
+from benchmarks.e2e_compare import build_suite
+
+
+def _strip_wall(cells) -> List[Dict]:
+    return [
+        {k: v for k, v in c.to_dict(round_to=None).items()
+         if k != "wall_s"}
+        for c in cells
+    ]
+
+
+def run(hours: float = 8.0, quick: bool = False) -> List[Dict]:
+    trials = 1 if quick else 2
+    if quick:
+        hours = 4.0
+    suite = build_suite(hours)
+
+    def best(**kw):
+        # min over trials: wall-clock on shared machines is noisy upward
+        runs = [suite.run(**kw) for _ in range(trials)]
+        return min(runs, key=lambda r: r.wall_s)
+
+    legacy = best(engine="legacy")
+    vector = best(engine="vector")
+    vector_par = best(engine="vector", workers="auto")
+
+    if _strip_wall(legacy.cells) != _strip_wall(vector.cells):
+        raise AssertionError(
+            "vector engine diverged from the legacy simulator on the "
+            "e2e matrix — differential guarantee violated"
+        )
+    if _strip_wall(vector.cells) != _strip_wall(vector_par.cells):
+        raise AssertionError(
+            "parallel suite execution changed metrics — cells must be "
+            "independent"
+        )
+
+    rows: List[Dict] = [
+        {
+            "metric": "e2e_matrix_wall_clock",
+            "hours": hours,
+            "n_cells": len(legacy),
+            "legacy_serial_s": round(legacy.wall_s, 2),
+            "vector_serial_s": round(vector.wall_s, 2),
+            "vector_parallel_s": round(vector_par.wall_s, 2),
+            "parallel_workers": vector_par.workers,
+            "engine_speedup_x": round(legacy.wall_s / vector.wall_s, 2),
+            "matrix_speedup_x": round(
+                legacy.wall_s / vector_par.wall_s, 2
+            ),
+            "metrics_identical": True,
+        }
+    ]
+    rows += [
+        {
+            "metric": "per_cell_wall_clock",
+            "cell": c_leg.cell_id,
+            "legacy_s": round(c_leg.wall_s, 3),
+            "vector_s": round(c_vec.wall_s, 3),
+            "speedup_x": round(c_leg.wall_s / max(c_vec.wall_s, 1e-9), 2),
+        }
+        for c_leg, c_vec in zip(legacy.cells, vector.cells)
+    ]
+    save("engine_speedup", rows)
+    emit_csv("engine_speedup", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,24 +1,23 @@
-"""Fig. 15: service latency across traces × workloads × policies — each
-cell one ServiceSpec variant of a single base spec."""
+"""Fig. 15: service latency across traces × workloads × policies — the
+scenario grid declared as a ``sweep:`` section and executed through the
+scenario-matrix engine (one tape per workload cell, shared across traces
+and policies)."""
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, List
 
-from benchmarks.common import emit_csv, run_service, save, tape, variant
-from repro.service import ReplicaPolicySpec, spec_from_dict
+from benchmarks.common import emit_csv, run_suite, save
+from repro.experiments import ScenarioSuite
 
 POLICIES = ("even_spread", "round_robin", "spothedge")
 WORKLOADS = ("poisson", "arena", "maf")
 TRACES = ("aws-1", "aws-2", "gcp-1")
 
 
-def run(hours: float = 6.0, quick: bool = False) -> List[Dict]:
-    if quick:
-        hours = 3.0
-    base = spec_from_dict({
-        "name": "latency-sweep",
+def build_suite(hours: float) -> ScenarioSuite:
+    return ScenarioSuite.from_spec({
+        "name": "latency",
         "model": "llama3.2-1b",
         "trace": "aws-1",
         "resources": {"instance_type": "g5.48xlarge"},
@@ -26,37 +25,32 @@ def run(hours: float = 6.0, quick: bool = False) -> List[Dict]:
         "workload": {"kind": "poisson", "rate_per_s": 1.2, "seed": 5},
         "sim": {"duration_hours": hours, "timeout_s": 60.0,
                 "concurrency": 2},
+        "sweep": {
+            "policies": list(POLICIES),
+            "traces": list(TRACES),
+            "workloads": [
+                {"kind": w, "rate_per_s": 1.2, "seed": 5} for w in WORKLOADS
+            ],
+        },
     })
-    rows: List[Dict] = []
-    for tname in TRACES:
-        for wname in WORKLOADS:
-            wl_spec = variant(
-                base,
-                trace=tname,
-                workload=dataclasses.replace(base.workload, kind=wname),
-            )
-            reqs = tape(wl_spec)    # one tape per (trace, workload) cell
-            for pol in POLICIES:
-                res = run_service(
-                    variant(wl_spec,
-                            replica_policy=ReplicaPolicySpec(name=pol)),
-                    requests=reqs,
-                    duration_s=hours * 3600,
-                )
-                rows.append(
-                    {
-                        "trace": tname,
-                        "workload": wname,
-                        "policy": pol,
-                        "mean_s": round(
-                            float(res.latencies_s.mean())
-                            if len(res.latencies_s) else float("nan"), 3
-                        ),
-                        "p50_s": round(res.pct(50), 3),
-                        "p99_s": round(res.pct(99), 3),
-                        "failure_rate": round(res.failure_rate, 4),
-                    }
-                )
+
+
+def run(hours: float = 6.0, quick: bool = False) -> List[Dict]:
+    if quick:
+        hours = 3.0
+    report = run_suite(build_suite(hours))
+    rows: List[Dict] = [
+        {
+            "trace": c.labels["trace"],
+            "workload": c.labels["workload"],
+            "policy": c.labels["policy"],
+            "mean_s": round(c.mean_s, 3),
+            "p50_s": round(c.p50_s, 3),
+            "p99_s": round(c.p99_s, 3),
+            "failure_rate": round(c.failure_rate, 4),
+        }
+        for c in report.cells
+    ]
     save("latency", rows)
     emit_csv("latency", rows)
     return rows

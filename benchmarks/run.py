@@ -18,6 +18,7 @@ from benchmarks import (
     cost,
     e2e_compare,
     engine_bench,
+    engine_speedup,
     latency,
     roofline,
     sensitivity,
@@ -31,6 +32,7 @@ MODULES = {
     "latency": latency,              # Fig. 15
     "sensitivity": sensitivity,      # Fig. 14c/d
     "engine_bench": engine_bench,    # Fig. 6
+    "engine_speedup": engine_speedup,  # legacy vs vector matrix timing
     "roofline": roofline,            # deliverable (g)
 }
 

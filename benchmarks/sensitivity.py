@@ -1,18 +1,18 @@
 """Fig. 14c/d: sensitivity to N_Extra (overprovision) and cold start d —
-each point a ServiceSpec variant sharing one request tape."""
+custom scenario axes (not the standard sweep grid), still executed through
+the scenario-matrix engine with one shared request tape."""
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List
 
-from benchmarks.common import emit_csv, run_service, save, tape, variant
+from benchmarks.common import emit_csv, run_suite, save, variant
+from repro.experiments import Scenario, ScenarioSuite
 from repro.service import ReplicaPolicySpec, spec_from_dict
 
 
-def run(hours: float = 6.0, quick: bool = False) -> List[Dict]:
-    if quick:
-        hours = 3.0
+def build_suite(hours: float) -> ScenarioSuite:
     base = spec_from_dict({
         "name": "sensitivity",
         "model": "llama3.2-1b",
@@ -24,34 +24,47 @@ def run(hours: float = 6.0, quick: bool = False) -> List[Dict]:
         "sim": {"duration_hours": hours, "timeout_s": 60.0,
                 "concurrency": 2, "control_interval_s": 15.0},
     })
-    reqs = tape(base)
-    rows: List[Dict] = []
 
-    def one(n_extra: int, cold: float) -> Dict:
-        spec = variant(
-            base,
-            replica_policy=ReplicaPolicySpec(
-                name="spothedge", overprovision=n_extra
+    def cell(sweep: str, n_extra: int, cold: float) -> Scenario:
+        return Scenario(
+            labels={"sweep": sweep, "n_extra": n_extra,
+                    "cold_start_s": cold},
+            spec=variant(
+                base,
+                replica_policy=ReplicaPolicySpec(
+                    name="spothedge", overprovision=n_extra
+                ),
+                sim=dataclasses.replace(base.sim, cold_start_s=cold),
             ),
-            sim=dataclasses.replace(base.sim, cold_start_s=cold),
+            tape_key=("sensitivity", hours),
         )
-        res = run_service(spec, requests=reqs, duration_s=hours * 3600)
-        return {
-            "p50_s": round(res.pct(50), 3),
-            "p99_s": round(res.pct(99), 3),
-            "failure_rate": round(res.failure_rate, 4),
-            "cost_vs_od": round(res.cost_vs_ondemand, 4),
-            "availability": round(res.availability, 4),
-        }
 
-    # Fig. 14c: sweep N_Extra at the default cold start
-    for n_extra in (0, 1, 2, 3, 4):
-        rows.append({"sweep": "n_extra", "n_extra": n_extra,
-                     "cold_start_s": 183.0, **one(n_extra, 183.0)})
-    # Fig. 14d: sweep cold start at the default N_Extra
-    for cold in (60.0, 183.0, 300.0, 600.0):
-        rows.append({"sweep": "cold_start", "n_extra": 2,
-                     "cold_start_s": cold, **one(2, cold)})
+    scenarios = [
+        # Fig. 14c: sweep N_Extra at the default cold start
+        *(cell("n_extra", n, 183.0) for n in (0, 1, 2, 3, 4)),
+        # Fig. 14d: sweep cold start at the default N_Extra
+        *(cell("cold_start", 2, c) for c in (60.0, 183.0, 300.0, 600.0)),
+    ]
+    return ScenarioSuite(scenarios, name="sensitivity")
+
+
+def run(hours: float = 6.0, quick: bool = False) -> List[Dict]:
+    if quick:
+        hours = 3.0
+    report = run_suite(build_suite(hours))
+    rows: List[Dict] = [
+        {
+            "sweep": c.labels["sweep"],
+            "n_extra": c.labels["n_extra"],
+            "cold_start_s": c.labels["cold_start_s"],
+            "p50_s": round(c.p50_s, 3),
+            "p99_s": round(c.p99_s, 3),
+            "failure_rate": round(c.failure_rate, 4),
+            "cost_vs_od": round(c.cost_vs_ondemand, 4),
+            "availability": round(c.availability, 4),
+        }
+        for c in report.cells
+    ]
     save("sensitivity", rows)
     emit_csv("sensitivity", rows)
     return rows

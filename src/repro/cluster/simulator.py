@@ -138,7 +138,9 @@ class ClusterSimulator:
         self._series_rs: List[int] = []
         self._series_ro: List[int] = []
         self._series_nt: List[int] = []
+        self._warn_info: Optional[Dict[str, Tuple[float, float]]] = None
         self._preempt_listeners: List[Callable[[Instance, float], None]] = []
+        self._terminate_listeners: List[Callable[[Instance, float], None]] = []
         self._ready_listeners: List[Callable[[Instance, float], None]] = []
         #: structured transition log (kept when record_series is on; the
         #: serving facade surfaces it through Service.status()).
@@ -167,6 +169,17 @@ class ClusterSimulator:
         self, fn: Callable[[Instance, float], None]
     ) -> None:
         self._preempt_listeners.append(fn)
+
+    def add_terminate_listener(
+        self, fn: Callable[[Instance, float], None]
+    ) -> None:
+        """Called when the policy/autoscaler terminates an instance.
+
+        Terminated instances are retired from ``self.instances``
+        immediately, so without this hook the serving layer would never
+        observe the death and its replica would keep serving as a zombie.
+        """
+        self._terminate_listeners.append(fn)
 
     def add_ready_listener(
         self, fn: Callable[[Instance, float], None]
@@ -237,9 +250,14 @@ class ClusterSimulator:
     def _apply_trace(self) -> None:
         """Preempt spot instances in zones whose capacity dropped."""
         row = self.trace.capacity_row(self.now)
+        # one pass over instances instead of one scan per zone
+        by_zone: Dict[str, List[Instance]] = {z: [] for z in self.zone_names}
+        for i in self.instances:
+            if i.is_spot() and i.is_active() and i.zone in by_zone:
+                by_zone[i.zone].append(i)
         for zone_name in self.zone_names:
             cap = row[zone_name]
-            active = self.active_spot(zone_name)
+            active = by_zone[zone_name]
             excess = len(active) - cap
             if excess <= 0:
                 continue
@@ -259,17 +277,30 @@ class ClusterSimulator:
         drop, warn (probabilistically — warnings are best-effort)."""
         if not self.config.warning_enabled:
             return
+        if self._warn_info is None:
+            # zone -> (warning lead, delivery prob), resolved once
+            self._warn_info = {
+                z: (
+                    max(
+                        self.catalog.cloud(
+                            self.catalog.zone(z).cloud
+                        ).preemption_warning_s,
+                        self.trace.dt,
+                    ),
+                    self.catalog.cloud(
+                        self.catalog.zone(z).cloud
+                    ).warning_delivery_prob,
+                )
+                for z in self.zone_names
+            }
         now_row = self.trace.capacity_row(self.now)
         for zone_name in self.zone_names:
-            cloud = self.catalog.zone(zone_name).cloud
-            spec = self.catalog.cloud(cloud)
-            horizon = self.now + max(
-                spec.preemption_warning_s, self.trace.dt
-            )
+            lead, prob = self._warn_info[zone_name]
+            horizon = self.now + lead
             if horizon >= self.trace.duration_s:
                 continue
             if self.trace.capacity(zone_name, horizon) < now_row[zone_name]:
-                if self.rng.random() < spec.warning_delivery_prob:
+                if self.rng.random() < prob:
                     for inst in self.active_spot(zone_name):
                         if inst.warned_at is None:
                             inst.warned_at = self.now
@@ -309,6 +340,8 @@ class ClusterSimulator:
                 inst = by_id.get(act.instance_id)
                 if inst is not None and inst.is_active():
                     inst.terminate(self.now)
+                    for fn in self._terminate_listeners:
+                        fn(inst, self.now)
                     self._retire(inst)
             else:  # pragma: no cover - defensive
                 raise TypeError(f"unknown action {act!r}")
@@ -331,17 +364,19 @@ class ClusterSimulator:
             obs = self._observation(n_target)
             self._execute(self.policy.decide(obs))
             # metrics AFTER actions so cold starts are charged immediately
-            ready = len(self.ready_instances())
-            if ready >= n_target:
+            n_ready_spot = n_ready_od = 0
+            for i in self.instances:
+                if i.state is InstanceState.READY:
+                    if i.kind is InstanceKind.SPOT:
+                        n_ready_spot += 1
+                    else:
+                        n_ready_od += 1
+            if n_ready_spot + n_ready_od >= n_target:
                 ok_ticks += 1
             if self.config.record_series:
                 self._series_t.append(self.now)
-                self._series_rs.append(
-                    sum(1 for i in self.ready_instances() if i.is_spot())
-                )
-                self._series_ro.append(
-                    sum(1 for i in self.ready_instances() if not i.is_spot())
-                )
+                self._series_rs.append(n_ready_spot)
+                self._series_ro.append(n_ready_od)
                 self._series_nt.append(n_target)
 
         self.now = ticks * dt

@@ -59,6 +59,20 @@ class SpotTrace:
                 f"cap shape {self.cap.shape} inconsistent with "
                 f"{len(self.zones)} zones"
             )
+        # zone -> column index; capacity()/capacity_row() sit on the
+        # simulator hot path, where a linear zones.index() per call adds up
+        self._zone_idx: Dict[str, int] = {
+            z: j for j, z in enumerate(self.zones)
+        }
+
+    def zone_index(self, zone: str) -> int:
+        try:
+            return self._zone_idx[zone]
+        except KeyError:
+            raise ValueError(
+                f"zone {zone!r} not in trace {self.name!r} "
+                f"(zones: {list(self.zones)})"
+            ) from None
 
     # -- basic accessors -------------------------------------------------
     @property
@@ -74,8 +88,7 @@ class SpotTrace:
 
     def capacity(self, zone: str, t: float) -> int:
         """Launchable spot capacity C(z, t)."""
-        j = self.zones.index(zone)
-        return int(self.cap[self.step_of(t), j])
+        return int(self.cap[self.step_of(t), self._zone_idx[zone]])
 
     def capacity_row(self, t: float) -> Dict[str, int]:
         row = self.cap[self.step_of(t)]
@@ -84,8 +97,7 @@ class SpotTrace:
     # -- statistics (used by the Fig. 3 / Fig. 5 benchmarks) -------------
     def availability(self, zone: str) -> float:
         """Fraction of time the zone has any spot capacity."""
-        j = self.zones.index(zone)
-        return float((self.cap[:, j] > 0).mean())
+        return float((self.cap[:, self.zone_index(zone)] > 0).mean())
 
     def preemption_indicator(self) -> np.ndarray:
         """bool [T, Z]: step where capacity *dropped* (a preemption event)."""
@@ -123,7 +135,7 @@ class SpotTrace:
         return out
 
     def slice_zones(self, zones: Sequence[str]) -> "SpotTrace":
-        idx = [self.zones.index(z) for z in zones]
+        idx = [self.zone_index(z) for z in zones]
         return SpotTrace(
             zones=tuple(zones),
             cap=self.cap[:, idx].copy(),
@@ -419,11 +431,21 @@ _DATASETS = {
 }
 
 
+_TRACE_CACHE: Dict[str, SpotTrace] = {}
+
+
 class TraceLibrary:
-    """Named access to the benchmark trace datasets (memoized)."""
+    """Named access to the benchmark trace datasets (memoized).
+
+    The cache is process-global: the synthetic generators walk a Markov
+    chain over every trace step, so regenerating a multi-week dataset per
+    ``TraceLibrary()`` instantiation (one per scenario cell) would dwarf
+    the simulation itself.  Traces are treated as immutable by all
+    consumers (slicing copies).
+    """
 
     def __init__(self) -> None:
-        self._cache: Dict[str, SpotTrace] = {}
+        self._cache: Dict[str, SpotTrace] = _TRACE_CACHE
 
     def names(self) -> List[str]:
         return sorted(_DATASETS)

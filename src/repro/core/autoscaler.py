@@ -20,6 +20,16 @@ class Autoscaler:
     def observe(self, now: float, num_requests: int) -> None:
         raise NotImplementedError
 
+    def observe_batch(self, events: "list[Tuple[float, int]]") -> None:
+        """Record several ``(now, num_requests)`` observations at once.
+
+        Equivalent to calling :meth:`observe` per event in order (events
+        must be time-ordered); exists so hot loops can amortize the call
+        overhead between target() reads.
+        """
+        for now, n in events:
+            self.observe(now, n)
+
     def target(self, now: float) -> int:
         raise NotImplementedError
 
@@ -31,6 +41,9 @@ class ConstantTarget(Autoscaler):
         self.n_target = int(n_target)
 
     def observe(self, now: float, num_requests: int) -> None:
+        pass
+
+    def observe_batch(self, events: "list[Tuple[float, int]]") -> None:
         pass
 
     def target(self, now: float) -> int:
@@ -70,6 +83,14 @@ class LoadAutoscaler(Autoscaler):
         if num_requests > 0:
             self._events.append((now, num_requests))
         self._evict(now)
+
+    def observe_batch(self, events: "list[Tuple[float, int]]") -> None:
+        # eviction is idempotent and driven by `now`, so appending the
+        # whole (time-ordered) batch and evicting once at the latest time
+        # leaves the window in exactly the per-call state
+        if events:
+            self._events.extend(e for e in events if e[1] > 0)
+            self._evict(events[-1][0])
 
     def _evict(self, now: float) -> None:
         # half-open window (now - window_s, now]

@@ -1,0 +1,26 @@
+"""Scenario-matrix experiments: declare a grid, run every cell, report.
+
+The §5.1 methodology sweeps policies × traces × workloads × seeds; this
+package is that sweep as a subsystem:
+
+* :class:`Scenario` — one cell (labels + a single-run ServiceSpec);
+* :class:`ScenarioSuite` — grid expansion from a spec's ``sweep:`` section
+  (or an explicit scenario list), shared request tapes, optional
+  process-parallel execution;
+* :class:`ScenarioReport` / :class:`CellResult` — per-cell P50/P90/P99,
+  failure rate, cost-vs-OD, availability, preemptions, wall-clock; JSON
+  artifacts under ``artifacts/bench/``.
+
+Every benchmark driver (e2e_compare, latency, sensitivity) and
+``launch/serve.py --sweep`` runs through this path.
+"""
+
+from repro.experiments.report import CellResult, ScenarioReport
+from repro.experiments.suite import Scenario, ScenarioSuite
+
+__all__ = [
+    "CellResult",
+    "Scenario",
+    "ScenarioReport",
+    "ScenarioSuite",
+]

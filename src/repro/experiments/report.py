@@ -1,0 +1,165 @@
+"""Scenario reports: per-cell metrics, aggregation, JSON artifacts.
+
+A :class:`ScenarioReport` is the output of ``ScenarioSuite.run``: one
+:class:`CellResult` per scenario (P50/P90/P99 latency, failure rate,
+cost-vs-OD, availability, preemption counts, wall-clock), plus suite-level
+metadata.  ``save()`` writes the JSON artifact under ``artifacts/bench/``.
+
+Artifact schema (``schema: 1``)::
+
+    {
+      "schema": 1,
+      "suite": "latency-sweep",
+      "engine": "vector",
+      "workers": 1,
+      "wall_s": 12.3,
+      "n_cells": 27,
+      "cells": [
+        {
+          "policy": "spothedge", "trace": "aws-1",
+          "workload": "poisson", "seed": 5,
+          "n_requests": 25902, "n_completed": 25721, "n_failed": 181,
+          "failure_rate": 0.007, "mean_s": 3.1,
+          "p50_s": 2.9, "p90_s": 4.9, "p99_s": 9.4,
+          "total_cost": 101.2, "cost_vs_ondemand": 0.41,
+          "availability": 0.97, "n_preemptions": 11,
+          "n_launch_failures": 3, "wall_s": 0.41
+        }, ...
+      ]
+    }
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Dict, List, Mapping, Optional
+
+import numpy as np
+
+from repro.serving.sim import ServingResult
+
+__all__ = ["CellResult", "ScenarioReport", "SCHEMA_VERSION"]
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass
+class CellResult:
+    """One scenario's labels + headline metrics."""
+
+    labels: Dict[str, Any]           # axis -> value (policy, trace, ...)
+    n_requests: int
+    n_completed: int
+    n_failed: int
+    failure_rate: float
+    mean_s: float
+    p50_s: float
+    p90_s: float
+    p99_s: float
+    total_cost: float
+    cost_vs_ondemand: float
+    availability: float
+    n_preemptions: int
+    n_launch_failures: int
+    wall_s: float
+
+    @staticmethod
+    def from_result(
+        labels: Mapping[str, Any], res: ServingResult, wall_s: float
+    ) -> "CellResult":
+        lat = res.latencies_s
+        return CellResult(
+            labels=dict(labels),
+            n_requests=res.n_requests,
+            n_completed=res.n_completed,
+            n_failed=res.n_failed,
+            failure_rate=res.failure_rate,
+            mean_s=float(lat.mean()) if len(lat) else float("nan"),
+            p50_s=res.pct(50),
+            p90_s=res.pct(90),
+            p99_s=res.pct(99),
+            total_cost=res.total_cost,
+            cost_vs_ondemand=res.cost_vs_ondemand,
+            availability=res.availability,
+            n_preemptions=res.n_preemptions,
+            n_launch_failures=res.n_launch_failures,
+            wall_s=wall_s,
+        )
+
+    @property
+    def cell_id(self) -> str:
+        return "/".join(str(v) for v in self.labels.values())
+
+    def to_dict(self, round_to: Optional[int] = 6) -> Dict[str, Any]:
+        out: Dict[str, Any] = dict(self.labels)
+        for f in dataclasses.fields(self):
+            if f.name == "labels":
+                continue
+            v = getattr(self, f.name)
+            if round_to is not None and isinstance(v, float) \
+                    and np.isfinite(v):
+                v = round(v, round_to)
+            out[f.name] = v
+        return out
+
+
+@dataclasses.dataclass
+class ScenarioReport:
+    """All cell results of one suite run, JSON-serializable."""
+
+    suite: str
+    engine: str
+    workers: int
+    cells: List[CellResult]
+    wall_s: float
+
+    # -- access ----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.cells)
+
+    def select(self, **labels: Any) -> List[CellResult]:
+        """Cells whose labels match every given ``axis=value``."""
+        return [
+            c for c in self.cells
+            if all(c.labels.get(k) == v for k, v in labels.items())
+        ]
+
+    # -- serialization ---------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "schema": SCHEMA_VERSION,
+            "suite": self.suite,
+            "engine": self.engine,
+            "workers": self.workers,
+            "wall_s": round(self.wall_s, 3),
+            "n_cells": len(self.cells),
+            "cells": [c.to_dict() for c in self.cells],
+        }
+
+    def save(self, directory: str = os.path.join("artifacts", "bench"),
+             stem: Optional[str] = None) -> str:
+        os.makedirs(directory, exist_ok=True)
+        path = os.path.join(
+            directory, f"{stem or 'scenario_' + self.suite}.json"
+        )
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, default=str)
+        return path
+
+    # -- display ---------------------------------------------------------
+    def summary(self) -> str:
+        lines = [
+            f"suite {self.suite}: {len(self.cells)} cells, "
+            f"engine={self.engine}, workers={self.workers}, "
+            f"wall={self.wall_s:.1f}s"
+        ]
+        for c in self.cells:
+            lines.append(
+                f"  {c.cell_id:<44s} p50={c.p50_s:7.2f}s "
+                f"p99={c.p99_s:8.2f}s fail={c.failure_rate:7.2%} "
+                f"cost={c.cost_vs_ondemand:6.2%} "
+                f"avail={c.availability:.2%} [{c.wall_s:.2f}s]"
+            )
+        return "\n".join(lines)

@@ -1,0 +1,359 @@
+"""ScenarioSuite: expand a ServiceSpec grid and run every cell.
+
+The suite is the one execution path for every multi-run experiment in the
+repo (``benchmarks/e2e_compare.py``, ``latency.py``, ``sensitivity.py``,
+``launch/serve.py --sweep``).  Two ways to build one:
+
+* **declaratively** — a spec with a ``sweep:`` section expands to the
+  ``policies × traces × workloads × seeds`` grid::
+
+      suite = ScenarioSuite.from_spec("sweep.yaml")
+      report = suite.run(workers="auto")
+      print(report.summary())
+
+* **programmatically** — hand the suite explicit :class:`Scenario`
+  variants (custom axes like trace windows or cold-start sweeps)::
+
+      suite = ScenarioSuite([Scenario(labels={...}, spec=variant), ...])
+
+Request tapes are shared: scenarios with equal ``tape_key`` replay
+identical arrivals (the grid keys tapes by workload × seed × horizon, so
+every policy/trace cell of one workload sees the same request stream —
+the §5.1 fair-comparison methodology).  Tapes are regenerated from the
+spec inside worker processes instead of being pickled across; workload
+generation is seed-deterministic, so every worker sees the same stream.
+
+Cells are independent, so ``run(workers=N)`` fans them out over worker
+processes; results are deterministic and identical for any worker count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+import time
+from typing import (
+    Any, Dict, Hashable, List, Mapping, Optional, Sequence, Tuple,
+)
+
+from repro.cluster.traces import SpotTrace
+from repro.experiments.report import CellResult, ScenarioReport
+from repro.service.builder import build_requests, build_service
+from repro.service.loader import load_spec
+from repro.service.spec import ServiceSpec, SpecError, SweepSpec
+from repro.workloads import Request
+
+__all__ = ["Scenario", "ScenarioSuite"]
+
+
+# label axes may not shadow metric fields — CellResult.to_dict flattens
+# labels and metrics into one record
+_RESERVED_LABELS = frozenset(
+    f.name for f in dataclasses.fields(CellResult) if f.name != "labels"
+)
+
+
+@dataclasses.dataclass
+class Scenario:
+    """One cell of a scenario matrix: labels + a single-run spec.
+
+    ``trace`` optionally overrides the spec's named trace with a
+    pre-sliced window (the e2e benchmark's available/volatile windows).
+    Scenarios sharing a ``tape_key`` replay one request tape.
+    """
+
+    labels: Dict[str, Any]
+    spec: ServiceSpec
+    trace: Optional[SpotTrace] = None
+    tape_key: Optional[Hashable] = None
+
+    def __post_init__(self) -> None:
+        if self.spec.sweep is not None:
+            raise SpecError(
+                "a Scenario wraps a single-run spec; expand the sweep "
+                "with ScenarioSuite.from_spec first"
+            )
+        clash = set(self.labels) & _RESERVED_LABELS
+        if clash:
+            raise SpecError(
+                f"scenario label axes {sorted(clash)} collide with "
+                "CellResult metric fields; pick different axis names"
+            )
+
+    @property
+    def cell_id(self) -> str:
+        return "/".join(str(v) for v in self.labels.values())
+
+
+def _workload_tape_key(spec: ServiceSpec) -> Tuple:
+    """Tapes are equal iff workload spec and arrival horizon are equal."""
+    w = spec.workload
+    return (
+        w.kind, w.rate_per_s, w.seed,
+        tuple(sorted(w.args.items())),
+        spec.sim.duration_s - spec.sim.drain_s,
+    )
+
+
+def _effective_tape_key(scenario: Scenario) -> Optional[Tuple]:
+    """Cache key for a scenario's shared tape.
+
+    The user's ``tape_key`` groups cells; composing it with the workload
+    fingerprint guarantees two suites that happen to reuse a key with
+    *different* workloads can never share a stale tape (the worker-side
+    cache outlives a single ``run()``).
+    """
+    if scenario.tape_key is None:
+        return None
+    return (scenario.tape_key, _workload_tape_key(scenario.spec))
+
+
+def _run_scenario(
+    scenario: Scenario,
+    tape_cache: Dict[Hashable, List[Request]],
+    engine: Optional[str],
+) -> CellResult:
+    """Build and run one cell; tapes are cached per process."""
+    spec = scenario.spec
+    if engine is not None and spec.sim.engine != engine:
+        spec = dataclasses.replace(
+            spec, sim=dataclasses.replace(spec.sim, engine=engine)
+        )
+    requests: Optional[List[Request]] = None
+    key = _effective_tape_key(scenario)
+    if key is not None:
+        requests = tape_cache.get(key)
+        if requests is None:
+            requests = tape_cache[key] = build_requests(spec)
+    t0 = time.perf_counter()
+    resolved = build_service(
+        spec, trace=scenario.trace, requests=requests
+    )
+    result = resolved.simulator.run(spec.sim.duration_s)
+    wall = time.perf_counter() - t0
+    return CellResult.from_result(scenario.labels, result, wall)
+
+
+def _disambiguate(
+    names: List[str], knobs: List[List[Tuple[str, Any]]]
+) -> List[str]:
+    """Axis labels: the bare name when unique, name[knob=...] or name#k
+    when several grid entries share it (e.g. two spothedge variants)."""
+    counts: Dict[str, int] = {}
+    for n in names:
+        counts[n] = counts.get(n, 0) + 1
+    seen: Dict[str, int] = {}
+    out: List[str] = []
+    for n, kv in zip(names, knobs):
+        if counts[n] == 1:
+            out.append(n)
+            continue
+        k = seen[n] = seen.get(n, 0) + 1
+        detail = ",".join(f"{key}={v}" for key, v in kv)
+        out.append(f"{n}[{detail}]" if detail else f"{n}#{k}")
+    # identical knob sets would still collide — fall back to indexing
+    if len(set(out)) != len(out):
+        out = [
+            lab if out.count(lab) == 1 else f"{lab}#{i}"
+            for i, lab in enumerate(out)
+        ]
+    return out
+
+
+# module-level worker state so ProcessPoolExecutor workers reuse tapes
+_worker_tapes: Dict[Hashable, List[Request]] = {}
+
+
+def _run_scenario_worker(
+    payload: Tuple[Scenario, Optional[str]]
+) -> CellResult:
+    scenario, engine = payload
+    return _run_scenario(scenario, _worker_tapes, engine)
+
+
+class ScenarioSuite:
+    """A batch of scenarios sharing one execution path."""
+
+    def __init__(self, scenarios: Sequence[Scenario],
+                 name: str = "suite") -> None:
+        self.scenarios: List[Scenario] = list(scenarios)
+        self.name = name
+        if not self.scenarios:
+            raise SpecError("ScenarioSuite needs at least one scenario")
+
+    def __len__(self) -> int:
+        return len(self.scenarios)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_spec(
+        cls,
+        spec: "ServiceSpec | Mapping[str, Any] | str",
+        name: Optional[str] = None,
+    ) -> "ScenarioSuite":
+        """Expand a spec's ``sweep`` grid (missing axes fall back to the
+        base spec's single value)."""
+        base = load_spec(spec)
+        sweep = base.sweep or SweepSpec()
+        policies = sweep.policies or (base.replica_policy,)
+        traces = sweep.traces or (base.trace,)
+        workloads = sweep.workloads or (base.workload,)
+        # no seeds axis: every workload keeps its own declared seed
+        seeds: Tuple[Optional[int], ...] = sweep.seeds or (None,)
+
+        policy_labels = _disambiguate(
+            [p.name for p in policies],
+            [sorted(p.policy_kwargs().items()) for p in policies],
+        )
+        workload_labels = _disambiguate(
+            [w.kind for w in workloads],
+            [
+                [("rate_per_s", w.rate_per_s), ("seed", w.seed),
+                 *sorted(w.args.items())]
+                for w in workloads
+            ],
+        )
+
+        scenarios: List[Scenario] = []
+        for (pol, plabel), tr, (wl, wlabel), seed in itertools.product(
+            zip(policies, policy_labels),
+            traces,
+            zip(workloads, workload_labels),
+            seeds,
+        ):
+            wl_seeded = (
+                wl if seed is None else dataclasses.replace(wl, seed=seed)
+            )
+            cell_spec = dataclasses.replace(
+                base,
+                name=(f"{base.name}-{plabel}-{tr}-{wlabel}"
+                      f"-s{wl_seeded.seed}"),
+                replica_policy=pol,
+                trace=tr,
+                workload=wl_seeded,
+                sweep=None,
+            )
+            scenarios.append(
+                Scenario(
+                    labels={
+                        "policy": plabel,
+                        "trace": tr,
+                        "workload": wlabel,
+                        "seed": wl_seeded.seed,
+                    },
+                    spec=cell_spec,
+                    tape_key=_workload_tape_key(cell_spec),
+                )
+            )
+        return cls(scenarios, name=name or base.name)
+
+    # ------------------------------------------------------------------
+    def run(
+        self,
+        *,
+        engine: Optional[str] = None,
+        workers: "int | str | None" = None,
+        save_to: Optional[str] = None,
+        progress: bool = False,
+    ) -> ScenarioReport:
+        """Run every scenario; returns the aggregated report.
+
+        ``engine`` overrides ``spec.sim.engine`` for every cell
+        ("vector" / "legacy").  ``workers`` fans independent cells out
+        over processes ("auto" = one per CPU); results are identical for
+        any worker count.  ``save_to`` writes the JSON artifact into the
+        given directory (e.g. ``artifacts/bench``).
+        """
+        n_workers = self._resolve_workers(workers)
+        t0 = time.perf_counter()
+        # serial and parallel share the process-level tape cache, so
+        # repeated runs of one suite (e.g. benchmark trials) pay tape
+        # generation once regardless of worker count
+        self._prime_tape_cache()
+        if n_workers <= 1 or len(self.scenarios) <= 1:
+            n_workers = 1
+            cells = []
+            for sc in self.scenarios:
+                cells.append(_run_scenario(sc, _worker_tapes, engine))
+                if progress:
+                    print(f"[suite {self.name}] {cells[-1].cell_id} done "
+                          f"({len(cells)}/{len(self.scenarios)})",
+                          flush=True)
+        else:
+            cells = self._run_parallel(n_workers, engine, progress)
+        wall = time.perf_counter() - t0
+        report = ScenarioReport(
+            suite=self.name,
+            engine=engine or self._engine_label(),
+            workers=n_workers,
+            cells=cells,
+            wall_s=wall,
+        )
+        if save_to is not None:
+            report.save(save_to)
+        return report
+
+    # ------------------------------------------------------------------
+    def _engine_label(self) -> str:
+        engines = {sc.spec.sim.engine for sc in self.scenarios}
+        return engines.pop() if len(engines) == 1 else "mixed"
+
+    @staticmethod
+    def _resolve_workers(workers: "int | str | None") -> int:
+        if workers is None:
+            return 1
+        if workers == "auto":
+            return os.cpu_count() or 1
+        try:
+            n = int(workers)
+        except (TypeError, ValueError):
+            raise SpecError(
+                f"workers must be an int >= 1 or 'auto', got {workers!r}"
+            ) from None
+        if n < 1:
+            raise SpecError(
+                f"workers must be an int >= 1 or 'auto', got {n}"
+            )
+        return n
+
+    def _prime_tape_cache(self) -> None:
+        """Generate this suite's shared tapes into the process cache.
+
+        Runs in the parent BEFORE any pool forks, so fork-started workers
+        inherit the tapes copy-on-write (spawn-started workers fall back
+        to deterministic regeneration).  Keys other suites left behind
+        are evicted so the process-global cache stays bounded by the
+        current suite.
+        """
+        needed = {
+            _effective_tape_key(sc): sc for sc in self.scenarios
+            if sc.tape_key is not None
+        }
+        for stale in set(_worker_tapes) - set(needed):
+            del _worker_tapes[stale]
+        for key, sc in needed.items():
+            if key not in _worker_tapes:
+                _worker_tapes[key] = build_requests(sc.spec)
+
+    def _run_parallel(
+        self, n_workers: int, engine: Optional[str], progress: bool
+    ) -> List[CellResult]:
+        import concurrent.futures as cf
+
+        payloads = [(sc, engine) for sc in self.scenarios]
+        cells: List[Optional[CellResult]] = [None] * len(payloads)
+        with cf.ProcessPoolExecutor(max_workers=n_workers) as pool:
+            futures = {
+                pool.submit(_run_scenario_worker, p): i
+                for i, p in enumerate(payloads)
+            }
+            n_done = 0
+            for fut in cf.as_completed(futures):
+                i = futures[fut]
+                cells[i] = fut.result()
+                n_done += 1
+                if progress:
+                    print(f"[suite {self.name}] {cells[i].cell_id} done "
+                          f"({n_done}/{len(payloads)})", flush=True)
+        return [c for c in cells if c is not None]

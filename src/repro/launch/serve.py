@@ -6,6 +6,11 @@
     # or run a declarative service file (paper Listing 1):
     PYTHONPATH=src python -m repro.launch.serve --spec examples/service.yaml
 
+    # or expand a spec's sweep: section into a scenario matrix and run
+    # every cell (report JSON lands under artifacts/bench/):
+    PYTHONPATH=src python -m repro.launch.serve --spec examples/sweep.yaml \
+        --sweep --workers auto
+
 Runs the full control plane (SpotHedge placement + dynamic fallback +
 autoscaler + least-loaded LB) against a recorded spot trace with the
 roofline-derived data-plane latency model — the §5.1 methodology.  Every
@@ -51,6 +56,25 @@ def spec_from_args(args: argparse.Namespace) -> dict:
     }
 
 
+def _run_sweep(spec, args: argparse.Namespace) -> int:
+    """Expand spec.sweep into a ScenarioSuite, run it, save the report."""
+    import os
+
+    from repro.experiments import ScenarioSuite
+
+    suite = ScenarioSuite.from_spec(spec)
+    print(f"[serve] sweep {spec.name!r}: {len(suite)} scenarios "
+          f"({spec.sweep.size if spec.sweep else 1} grid cells)")
+    report = suite.run(
+        workers=args.workers,
+        save_to=os.path.join("artifacts", "bench"),
+        progress=True,
+    )
+    print(report.summary())
+    print(f"[serve] report: artifacts/bench/scenario_{suite.name}.json")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--spec", default=None, metavar="FILE",
@@ -69,12 +93,33 @@ def main(argv=None) -> int:
     ap.add_argument("--timeout", type=float, default=100.0)
     ap.add_argument("--status", action="store_true",
                     help="print the resolved service status as JSON")
+    ap.add_argument("--sweep", action="store_true",
+                    help="expand the spec's sweep: grid into a scenario "
+                    "suite and run every cell")
+    ap.add_argument("--workers", default=None, metavar="N|auto",
+                    help="run sweep cells in N worker processes "
+                    "('auto' = one per CPU); default serial")
+    ap.add_argument("--engine", default=None,
+                    choices=["vector", "legacy"],
+                    help="override sim.engine for this run")
     args = ap.parse_args(argv)
 
     from repro.service import SpecError
 
     try:
         spec = load_spec(args.spec if args.spec else spec_from_args(args))
+        if args.engine and spec.sim.engine != args.engine:
+            import dataclasses
+
+            spec = dataclasses.replace(
+                spec, sim=dataclasses.replace(spec.sim, engine=args.engine)
+            )
+        if args.sweep:
+            return _run_sweep(spec, args)
+        if args.workers is not None:
+            print("error: --workers requires --sweep (a single service "
+                  "run is one cell)", file=sys.stderr)
+            return 2
         svc = Service(spec)
         resolved = svc.resolve()
         print(f"[serve] {spec.replica_policy.name} serving "

@@ -33,6 +33,7 @@ from repro.service.spec import (
     ServiceSpec,
     SimSpec,
     SpecError,
+    SweepSpec,
     WorkloadSpec,
 )
 
@@ -46,6 +47,7 @@ __all__ = [
     "ServiceSpec",
     "SimSpec",
     "SpecError",
+    "SweepSpec",
     "WorkloadSpec",
     "build_requests",
     "build_service",

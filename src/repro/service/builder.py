@@ -27,6 +27,7 @@ from repro.serving.load_balancer import (
     LoadBalancer,
     RoundRobinBalancer,
 )
+from repro.serving.engine import VectorizedServingEngine
 from repro.serving.sim import ServingSimulator
 from repro.service.spec import ResourceSpec, ServiceSpec, SpecError
 from repro.workloads import Request, make_workload
@@ -152,7 +153,8 @@ class ResolvedService:
     autoscaler: Autoscaler
     load_balancer: LoadBalancer
     requests: List[Request]
-    simulator: ServingSimulator
+    # ServingSimulator or VectorizedServingEngine, per spec.sim.engine
+    simulator: "ServingSimulator | VectorizedServingEngine"
 
 
 def build_service(
@@ -182,7 +184,11 @@ def build_service(
         if spec.workload.kind == "none" and requests is None
         else sim_spec.sub_step_s
     )
-    simulator = ServingSimulator(
+    engine_cls = (
+        ServingSimulator if sim_spec.engine == "legacy"
+        else VectorizedServingEngine
+    )
+    simulator = engine_cls(
         trace,
         policy,
         reqs,

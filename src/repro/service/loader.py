@@ -23,6 +23,7 @@ from repro.service.spec import (
     ServiceSpec,
     SimSpec,
     SpecError,
+    SweepSpec,
     WorkloadSpec,
 )
 
@@ -99,6 +100,55 @@ def _bad_any_of(entry: Any) -> Mapping[str, Any]:
     )
 
 
+def _sweep_policy(entry: Any) -> ReplicaPolicySpec:
+    """A sweep policy is a bare name or a full replica_policy mapping."""
+    if isinstance(entry, str):
+        return ReplicaPolicySpec(name=entry)
+    if isinstance(entry, Mapping):
+        return ReplicaPolicySpec(
+            **_pick(entry, ReplicaPolicySpec, "sweep.policies entry")
+        )
+    raise SpecError(
+        f"sweep.policies entries must be policy names or mappings, "
+        f"got {entry!r}"
+    )
+
+
+def _sweep_workload(entry: Any) -> WorkloadSpec:
+    """A sweep workload is a bare kind or a full workload mapping."""
+    if isinstance(entry, str):
+        return WorkloadSpec(kind=entry)
+    if isinstance(entry, Mapping):
+        return WorkloadSpec(
+            **_pick(entry, WorkloadSpec, "sweep.workloads entry")
+        )
+    raise SpecError(
+        f"sweep.workloads entries must be workload kinds or mappings, "
+        f"got {entry!r}"
+    )
+
+
+def _sweep_from_dict(d: Mapping[str, Any]) -> SweepSpec:
+    _check_keys(d, ("policies", "traces", "workloads", "seeds"), "sweep")
+    for key in ("policies", "traces", "workloads", "seeds"):
+        if key in d and not isinstance(d[key], (list, tuple)):
+            raise SpecError(
+                f"sweep.{key} must be a list, got {type(d[key]).__name__}"
+            )
+    traces = tuple(d.get("traces", ()))
+    for tr in traces:
+        if not isinstance(tr, str):
+            raise SpecError(
+                f"sweep.traces entries must be strings, got {tr!r}"
+            )
+    return SweepSpec(
+        policies=tuple(_sweep_policy(e) for e in d.get("policies", ())),
+        traces=traces,
+        workloads=tuple(_sweep_workload(e) for e in d.get("workloads", ())),
+        seeds=tuple(d.get("seeds", ())),
+    )
+
+
 def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
     """Build and validate a :class:`ServiceSpec` from a plain dict."""
     if not isinstance(d, Mapping):
@@ -110,7 +160,7 @@ def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
     _check_keys(
         d,
         ("name", "model", "trace", "resources", "replica_policy",
-         "autoscaler", "workload", "sim", "load_balancer"),
+         "autoscaler", "workload", "sim", "load_balancer", "sweep"),
         "service spec",
     )
     try:
@@ -130,6 +180,8 @@ def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
             **_pick(_section(d, "workload"), WorkloadSpec, "workload")
         )
         kw["sim"] = SimSpec(**_pick(_section(d, "sim"), SimSpec, "sim"))
+        if d.get("sweep") is not None:
+            kw["sweep"] = _sweep_from_dict(_section(d, "sweep"))
         spec = ServiceSpec(**kw)
     except TypeError as e:
         # e.g. a list where a scalar belongs — surface as a spec error

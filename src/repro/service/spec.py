@@ -45,6 +45,7 @@ __all__ = [
     "AutoscalerSpec",
     "WorkloadSpec",
     "SimSpec",
+    "SweepSpec",
     "ServiceSpec",
 ]
 
@@ -306,9 +307,19 @@ class WorkloadSpec:
 # ---------------------------------------------------------------------------
 
 
+ENGINE_NAMES = ("vector", "legacy")
+
+
 @dataclasses.dataclass(frozen=True)
 class SimSpec:
-    """Simulation fabric: horizon, cold start, control cadence, SLO."""
+    """Simulation fabric: horizon, cold start, control cadence, SLO.
+
+    ``engine`` picks the serving hot path: ``"vector"`` (default) is the
+    NumPy array engine in ``repro.serving.engine``; ``"legacy"`` is the
+    per-request object simulator in ``repro.serving.sim``.  The two are
+    decision-for-decision equivalent (see ``tests/test_differential.py``);
+    the vector engine is simply several times faster.
+    """
 
     duration_hours: float = 4.0
     cold_start_s: float = 183.0
@@ -321,8 +332,14 @@ class SimSpec:
     warning_enabled: bool = True
     seed: int = 0
     record_series: bool = True
+    engine: str = "vector"
 
     def __post_init__(self) -> None:
+        _require(
+            self.engine in ENGINE_NAMES,
+            f"sim.engine must be one of {list(ENGINE_NAMES)}, "
+            f"got {self.engine!r}",
+        )
         _require(
             self.duration_hours > 0,
             f"sim.duration_hours must be positive, got {self.duration_hours}",
@@ -365,6 +382,66 @@ class SimSpec:
 
 
 # ---------------------------------------------------------------------------
+# Sweep (scenario grid) — consumed by repro.experiments.ScenarioSuite
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A scenario grid: ``policies × traces × workloads × seeds``.
+
+    Every axis left empty falls back to the base spec's single value, so a
+    spec with ``sweep: {}`` expands to exactly one scenario.  Seeds
+    override ``workload.seed`` per cell — the standard way to get
+    replicated measurements of one configuration.
+
+        sweep:
+          policies: [spothedge, even_spread, ondemand_only]
+          traces: [aws-1, gcp-1]
+          workloads: [poisson, arena]
+          seeds: [0, 1, 2]
+    """
+
+    policies: Tuple[ReplicaPolicySpec, ...] = ()
+    traces: Tuple[str, ...] = ()
+    workloads: Tuple["WorkloadSpec", ...] = ()
+    seeds: Tuple[int, ...] = ()
+
+    def __post_init__(self) -> None:
+        for tr in self.traces:
+            _require(
+                bool(tr), "sweep.traces entries must be non-empty strings"
+            )
+        for s in self.seeds:
+            _require(
+                isinstance(s, int) and not isinstance(s, bool),
+                f"sweep.seeds entries must be ints, got {s!r}",
+            )
+
+    @property
+    def size(self) -> int:
+        """Number of scenarios the grid expands to (axes default to 1)."""
+        return (
+            max(len(self.policies), 1)
+            * max(len(self.traces), 1)
+            * max(len(self.workloads), 1)
+            * max(len(self.seeds), 1)
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        if self.policies:
+            out["policies"] = [p.to_dict() for p in self.policies]
+        if self.traces:
+            out["traces"] = list(self.traces)
+        if self.workloads:
+            out["workloads"] = [w.to_dict() for w in self.workloads]
+        if self.seeds:
+            out["seeds"] = list(self.seeds)
+        return out
+
+
+# ---------------------------------------------------------------------------
 # The service spec
 # ---------------------------------------------------------------------------
 
@@ -389,6 +466,7 @@ class ServiceSpec:
     workload: WorkloadSpec = dataclasses.field(default_factory=WorkloadSpec)
     sim: SimSpec = dataclasses.field(default_factory=SimSpec)
     load_balancer: str = "least_loaded"
+    sweep: Optional[SweepSpec] = None
 
     def __post_init__(self) -> None:
         _require(bool(self.name), "service.name must be set")
@@ -415,6 +493,20 @@ class ServiceSpec:
             f"unknown replica_policy.name {self.replica_policy.name!r}; "
             f"registered policies: {policies}",
         )
+        if self.sweep is not None:
+            for p in self.sweep.policies:
+                _require(
+                    p.name in policies,
+                    f"unknown sweep policy {p.name!r}; "
+                    f"registered policies: {policies}",
+                )
+            names = TraceLibrary().names()
+            for tr in self.sweep.traces:
+                _require(
+                    tr in names or tr.endswith((".json", ".npz")),
+                    f"unknown sweep trace {tr!r}; named datasets: {names} "
+                    "(or pass a .json/.npz trace file path)",
+                )
         _require(
             self.model in ARCH_IDS,
             f"unknown model {self.model!r}; available: {ARCH_IDS}",
@@ -440,7 +532,7 @@ class ServiceSpec:
 
     # -- (de)serialization ------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        out = {
             "name": self.name,
             "model": self.model,
             "trace": self.trace,
@@ -451,3 +543,6 @@ class ServiceSpec:
             "sim": self.sim.to_dict(),
             "load_balancer": self.load_balancer,
         }
+        if self.sweep is not None:
+            out["sweep"] = self.sweep.to_dict()
+        return out

@@ -1,16 +1,19 @@
-"""Serving data plane: latency model, replicas, LB, controller, engine.
+"""Serving data plane: latency model, replicas, LB, serving engines.
 
-Two execution modes share the same control plane (policy / autoscaler /
-controller / LB):
+Two equivalent simulation engines share the control plane (policy /
+autoscaler / controller / LB) and the roofline latency model:
 
-* **simulated replicas** (``sim.py``): request service times come from the
-  roofline-derived latency model — this is how the paper's §5 experiments
-  replay 22-hour workloads in seconds;
-* **live replicas** (``engine.py``): a real JAX inference engine (prefill +
-  continuous-batching decode) serves actual tokens; preemptions are
-  injected into the running fleet (the §5.1 analogue on this container).
+* ``engine.py`` — :class:`VectorizedServingEngine`, the default hot path:
+  NumPy array state, event-skipping sub-ticks, several times faster;
+* ``sim.py`` — :class:`ServingSimulator`, the legacy per-request object
+  simulator; kept as the readable reference implementation and the
+  differential-test oracle (``tests/test_differential.py``).
+
+Live token-serving (real JAX prefill/decode) lives in
+``examples/serve_llm.py`` / ``benchmarks/engine_bench.py``.
 """
 
+from repro.serving.engine import VectorizedServingEngine
 from repro.serving.latency import LatencyModel
 from repro.serving.load_balancer import LeastLoadedBalancer, RoundRobinBalancer
 from repro.serving.replica import Replica, ReplicaState
@@ -24,4 +27,5 @@ __all__ = [
     "ReplicaState",
     "ServingSimulator",
     "ServingResult",
+    "VectorizedServingEngine",
 ]

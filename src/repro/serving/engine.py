@@ -1,0 +1,614 @@
+"""Vectorized serving engine — the hot-path replacement for ``sim.py``.
+
+``VectorizedServingEngine`` runs the same §5.1 serving methodology as
+:class:`repro.serving.sim.ServingSimulator` but replaces the per-request /
+per-replica Python object loops with NumPy array state:
+
+* the request tape is compiled once into ``float64`` arrays (arrival
+  times, roofline service times, client-region codes) — no
+  ``LatencyModel`` call or ``Request`` attribute chase ever happens inside
+  the sub-tick loop;
+* arrivals are delivered in batches with ``np.searchsorted`` over the
+  arrival array;
+* timeout expiry over deep pending/queue backlogs is a vectorized mask
+  over the arrival array instead of a per-entry Python scan;
+* per-replica RTTs are precomputed per client-region code at replica
+  creation, so the load balancer's ``(load, rtt, id)`` key needs no
+  string parsing through ``region_rtt_ms``;
+* completions are tracked in a global min-heap of finish times: a sub-tick
+  only visits replicas that have a finish due or received new work, and
+  sub-ticks where provably nothing can happen are skipped outright;
+* dead replicas cost nothing — the legacy simulator probes every replica
+  it ever created on every sub-tick, which degrades linearly with
+  preemption churn over long volatile traces.
+
+The engine is **decision-for-decision equivalent** to the legacy
+simulator: it visits the same sub-tick grid points (same float
+accumulation), delivers the same arrival batches to the autoscaler,
+assigns requests to replicas with the same ``(load, rtt, id)`` /
+round-robin rules, applies the same interference factor at dispatch, and
+fails the same requests at the same instants.  ``tests/test_differential.py``
+locks the equivalence down; ``tests/test_golden.py`` pins the metrics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.cluster.catalog import Catalog, default_catalog, region_rtt_ms
+from repro.cluster.instance import Instance
+from repro.cluster.simulator import ClusterSimulator, SimConfig
+from repro.cluster.traces import SpotTrace
+from repro.core.autoscaler import Autoscaler, ConstantTarget
+from repro.core.policy import Policy
+from repro.models.config import ModelConfig
+from repro.serving.latency import LatencyModel
+from repro.serving.load_balancer import (
+    LeastLoadedBalancer,
+    LoadBalancer,
+    RoundRobinBalancer,
+)
+from repro.serving.sim import ServingResult
+from repro.workloads.arrivals import Request
+
+__all__ = ["VectorizedServingEngine"]
+
+_INF = float("inf")
+# below this size a plain Python scan beats numpy call overhead
+_VEC_MIN = 24
+
+
+class _Rep:
+    """Array-era replica record: plain slots, no FSM object, no probes."""
+
+    __slots__ = ("inst", "slot", "rid", "dead", "rtt",
+                 "running", "queue", "qage", "qmin")
+
+    def __init__(self, inst: Instance, slot: int,
+                 rtt: List[float]) -> None:
+        self.inst = inst
+        self.slot = slot
+        self.rid = inst.id
+        self.dead = False
+        self.rtt = rtt                       # client-region code -> seconds
+        self.running: List[Tuple[float, int]] = []   # (finish_s, req index)
+        self.queue: List[int] = []                   # req indices, FIFO
+        self.qage: List[float] = []          # parallel arrival times
+        self.qmin = _INF                     # lower bound on queued arrivals
+
+    @property
+    def load(self) -> int:
+        return len(self.running) + len(self.queue)
+
+
+class VectorizedServingEngine:
+    """Drop-in for :class:`ServingSimulator` with an array-based hot path."""
+
+    def __init__(
+        self,
+        trace: SpotTrace,
+        policy: Policy,
+        requests: Sequence[Request],
+        cfg: ModelConfig,
+        *,
+        itype: str = "p3.2xlarge",
+        catalog: Optional[Catalog] = None,
+        autoscaler: Optional[Autoscaler] = None,
+        lb: Optional[LoadBalancer] = None,
+        sim_config: Optional[SimConfig] = None,
+        timeout_s: float = 100.0,
+        sub_step_s: float = 1.0,
+        workload_name: str = "workload",
+        concurrency: Optional[int] = None,
+    ) -> None:
+        self.catalog = catalog or default_catalog()
+        self.cfg = cfg
+        self.itype = self.catalog.instance_type(itype)
+        self.latency_model = LatencyModel.for_model(cfg, self.itype)
+        self.timeout_s = timeout_s
+        self.sub_step_s = sub_step_s
+        self.workload_name = workload_name
+        self.concurrency = concurrency or min(
+            self.latency_model.max_concurrency(), 16
+        )
+
+        lb = lb or LeastLoadedBalancer()
+        # exact types only: a subclass may override pick(), and silently
+        # simulating it as the vanilla balancer would be wrong
+        if type(lb) is RoundRobinBalancer:
+            self._lb_kind = "rr"
+        elif type(lb) is LeastLoadedBalancer:
+            self._lb_kind = "ll"
+        else:
+            raise TypeError(
+                f"VectorizedServingEngine supports LeastLoadedBalancer and "
+                f"RoundRobinBalancer, got {type(lb).__name__}; use the "
+                "legacy ServingSimulator (sim.engine: legacy) for custom "
+                "balancers"
+            )
+        self._rr_cursor = 0
+
+        # ---- compile the request tape into arrays ---------------------
+        reqs = sorted(requests, key=lambda r: r.arrival_s)
+        self.requests = reqs
+        n = len(reqs)
+        self._n = n
+        self._arr = np.fromiter(
+            (r.arrival_s for r in reqs), dtype=np.float64, count=n
+        )
+        p_tok = np.fromiter(
+            (r.prompt_tokens for r in reqs), dtype=np.float64, count=n
+        )
+        o_tok = np.fromiter(
+            (r.output_tokens for r in reqs), dtype=np.float64, count=n
+        )
+        lm = self.latency_model
+        # same operation order as LatencyModel.service_s so every value is
+        # bit-identical to the legacy per-request computation
+        prefill = (2.0 * lm._active_params) * p_tok / lm.flops_per_s
+        self._svc = (lm.overhead_s + prefill) + o_tok * lm.decode_s_per_token()
+        # Python-list mirrors for scalar access: list indexing and float
+        # arithmetic are several times faster than numpy scalar indexing
+        # in the per-request loops, and .tolist() round-trips exactly
+        self._arr_l: List[float] = self._arr.tolist()
+        self._svc_l: List[float] = self._svc.tolist()
+
+        # client regions as small int codes; each replica precomputes its
+        # RTT per code on creation
+        regions: List[str] = []
+        region_code: Dict[str, int] = {}
+        rcode = np.empty(n, dtype=np.int32)
+        for i, r in enumerate(reqs):
+            c = region_code.get(r.client_region)
+            if c is None:
+                c = region_code[r.client_region] = len(regions)
+                regions.append(r.client_region)
+            rcode[i] = c
+        self._rcode = rcode
+        self._rcode_l: List[int] = rcode.tolist()
+        self._client_regions = regions
+
+        # ---- mutable serving state ------------------------------------
+        self._ptr = 0                        # next arrival index
+        self._pending: List[int] = []        # request indices, FIFO
+        self._pmin = _INF                    # min arrival over pending
+        self._qn = 0                         # total queued entries
+        self._qmin = _INF                    # min arrival over queued
+        self._heap: List[Tuple[float, int]] = []   # (finish_s, slot)
+        self._reps: List[_Rep] = []          # insertion order (mirrors dict)
+        self._live: List[_Rep] = []          # non-dead, insertion order
+        self._live_dirty = False
+        self._by_id: Dict[int, _Rep] = {}
+        self._obs: List[Tuple[float, int]] = []   # autoscaler batch
+        self._touched: Set[int] = set()      # slots enqueued at this point
+        self._due: Set[int] = set()          # slots with finishes due
+        # per-control-window LB state (ready set is constant in a window)
+        self._ready_slots: List[int] = []
+        self._ready_reps: List[_Rep] = []
+        self._pos: Dict[int, int] = {}       # slot -> index in ready lists
+        self._loads: List[int] = []
+        self._ids: List[int] = []
+        self._cols: Dict[int, List[float]] = {}   # rcode -> rtt column
+
+        self.latencies: List[float] = []
+        self.failed = 0
+        self.completed = 0
+
+        if sim_config is None:
+            cfg_sim = SimConfig(itype=itype, control_interval_s=15.0)
+        else:
+            cfg_sim = dataclasses.replace(sim_config, itype=itype)
+        self.cluster = ClusterSimulator(
+            trace,
+            policy,
+            catalog=self.catalog,
+            autoscaler=autoscaler or ConstantTarget(4),
+            config=cfg_sim,
+            tick_hook=self._tick,
+        )
+        self.cluster.add_preempt_listener(self._on_dead)
+        self.cluster.add_terminate_listener(self._on_dead)
+        self._observe_batch = self.cluster.autoscaler.observe_batch
+        self._searchsorted = self._arr.searchsorted
+
+    # ------------------------------------------------------------------
+    # replica lifecycle
+    # ------------------------------------------------------------------
+    def _new_rep(self, inst: Instance) -> _Rep:
+        rtt = [
+            region_rtt_ms(creg, inst.region) / 1e3
+            for creg in self._client_regions
+        ]
+        rep = _Rep(inst, len(self._reps), rtt)
+        self._reps.append(rep)
+        self._live.append(rep)
+        self._by_id[inst.id] = rep
+        return rep
+
+    def _kill(self, rep: _Rep) -> None:
+        """Preemption/termination: in-flight then queued back to pending."""
+        if rep.dead:
+            return
+        rep.dead = True
+        self._live_dirty = True
+        arr = self._arr_l
+        pending = self._pending
+        pmin = self._pmin
+        for _, i in rep.running:
+            pending.append(i)
+            if arr[i] < pmin:
+                pmin = arr[i]
+        for i in rep.queue:
+            pending.append(i)
+            if arr[i] < pmin:
+                pmin = arr[i]
+        self._pmin = pmin
+        self._qn -= len(rep.queue)
+        rep.running = []
+        rep.queue = []
+        rep.qage = []
+        rep.qmin = _INF
+
+    def _on_dead(self, inst: Instance, now: float) -> None:
+        rep = self._by_id.get(inst.id)
+        if rep is not None:
+            self._kill(rep)
+
+    def _sync(self) -> None:
+        """Reconcile the replica set with the cluster's active instances.
+
+        Instance state only changes at control ticks, so (unlike the legacy
+        per-sub-tick probe loop) one reconciliation per window is exact.
+        The window-constant LB state (ready order, loads, rtt columns) is
+        rebuilt here.
+        """
+        for inst in self.cluster.instances:
+            rep = self._by_id.get(inst.id)
+            if rep is None:
+                if inst.is_active():
+                    self._new_rep(inst)
+            elif not inst.is_active():
+                self._kill(rep)
+        if self._live_dirty:
+            self._live = [r for r in self._live if not r.dead]
+            self._live_dirty = False
+        ready = [r for r in self._live if r.inst.is_ready()]
+        self._ready_reps = ready
+        self._ready_slots = [r.slot for r in ready]
+        self._pos = {r.slot: j for j, r in enumerate(ready)}
+        self._loads = [len(r.running) + len(r.queue) for r in ready]
+        self._ids = [r.rid for r in ready]
+        self._cols = {}
+
+    # ------------------------------------------------------------------
+    # sub-tick loop
+    # ------------------------------------------------------------------
+    def _active(self, t: float) -> bool:
+        """Could anything at all happen at grid point ``t``?
+
+        Conservative: a false positive costs one no-op pass (exactly what
+        the legacy simulator does on every sub-tick), never correctness.
+        """
+        if self._ptr < self._n and self._arr_l[self._ptr] <= t:
+            return True
+        if self._heap and self._heap[0][0] <= t:
+            return True
+        if self._pending:
+            if self._ready_slots:
+                return True
+            if t - self._pmin > self.timeout_s:
+                return True
+        if self._qn and t - self._qmin > self.timeout_s:
+            return True
+        return False
+
+    def _tick(self, now: float, cluster: ClusterSimulator) -> None:
+        self._sync()
+        dt = cluster.config.control_interval_s
+        t = now
+        end = now + dt
+        # identical float accumulation to the legacy loop so grid points,
+        # arrival batches and timeout instants match bit-for-bit
+        while t < end:
+            if self._active(t):
+                self._process(t, cluster)
+            t += self.sub_step_s
+        # flush arrival observations before the cluster reads target():
+        # batch-equivalent to per-sub-tick observe() calls (eviction is
+        # idempotent), amortizing the call overhead per control window
+        if self._obs:
+            self._observe_batch(self._obs)
+            self._obs.clear()
+
+    def _process(self, t: float, cluster: ClusterSimulator) -> None:
+        # 1) arrivals
+        ptr = self._ptr
+        if ptr < self._n and self._arr_l[ptr] <= t:
+            new_ptr = int(self._searchsorted(t, side="right"))
+            self._pending.extend(range(ptr, new_ptr))
+            m = self._arr_l[ptr]
+            if m < self._pmin:
+                self._pmin = m
+            self._ptr = new_ptr
+            self._obs.append((t, new_ptr - ptr))
+        # 2) slots with completions due, from the finish-time heap.  Found
+        #    BEFORE dispatch so the dispatch fast path knows which replicas
+        #    may not start work until their completions are processed.
+        due = self._due
+        due.clear()
+        heap = self._heap
+        reps = self._reps
+        while heap and heap[0][0] <= t:
+            _, s = heapq.heappop(heap)
+            if not reps[s].dead:
+                due.add(s)
+        # 3) dispatch (fills self._touched with slots that got new queued
+        #    work; replicas with free capacity, an empty queue and no due
+        #    completion start the request immediately — identical to the
+        #    legacy queue-then-start within the same sub-tick, because the
+        #    dispatch timeout filter already applied the expiry predicate)
+        touched = self._touched
+        touched.clear()
+        if self._pending:
+            self._dispatch(t, due)
+        # 4) step the affected replicas.  Untouched slots cannot change:
+        #    their running set shrinks only via a due finish (a heap pop)
+        #    and their queue only drains into slots freed the same way —
+        #    except queue expiry, which is wall-clock driven and handled
+        #    by the guarded full pass (per-replica qmin bounds make it a
+        #    skip for replicas that cannot hold an expired entry).
+        if self._qn and self.timeout_s > 0 \
+                and t - self._qmin > self.timeout_s:
+            self._step(t, self._ready_slots, due, expire=True)
+            qmin_g = _INF
+            for r in self._ready_reps:
+                if r.qmin < qmin_g:
+                    qmin_g = r.qmin
+            self._qmin = qmin_g
+        elif due:
+            slots = sorted(due | touched) if touched else sorted(due)
+            self._step(t, slots, due, expire=False)
+        elif touched:
+            self._step(t, sorted(touched), due, expire=False)
+        if self._qn == 0:
+            self._qmin = _INF
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, t: float, due: Set[int]) -> None:
+        pending = self._pending
+        arr = self._arr_l
+        timeout = self.timeout_s
+        ready = self._ready_slots
+        if not ready:
+            # nothing to route to; age out requests past their timeout
+            if len(pending) >= _VEC_MIN:
+                arr_v = self._arr
+                pa = np.fromiter(pending, dtype=np.int64,
+                                 count=len(pending))
+                keep = (t - arr_v[pa]) <= timeout
+                n_keep = int(keep.sum())
+                if n_keep != len(pending):
+                    self.failed += len(pending) - n_keep
+                    pa = pa[keep]
+                    self._pending = pa.tolist()
+                    self._pmin = (
+                        float(arr_v[pa].min()) if n_keep else _INF
+                    )
+            else:
+                kept: List[int] = []
+                pmin = _INF
+                for i in pending:
+                    if t - arr[i] > timeout:
+                        self.failed += 1
+                    else:
+                        kept.append(i)
+                        if arr[i] < pmin:
+                            pmin = arr[i]
+                self._pending = kept
+                self._pmin = pmin
+            return
+
+        reps = self._reps
+        touched = self._touched
+        svc = self._svc_l
+        heap = self._heap
+        conc = self.concurrency
+        qn = 0
+        qmin = self._qmin
+        # pmin is a lower bound on every pending arrival, so when even the
+        # oldest request is within the timeout the per-request check is skipped
+        check_to = t - self._pmin > timeout
+        if self._lb_kind == "rr":
+            nready = len(ready)
+            loads = self._loads
+            cur = self._rr_cursor
+            for i in pending:
+                if check_to and t - arr[i] > timeout:
+                    self.failed += 1
+                    continue
+                j = cur % nready
+                s = ready[j]
+                cur += 1
+                # RR routing ignores loads, but _step's completion/expiry
+                # bookkeeping decrements them, so keep the counts honest
+                loads[j] += 1
+                rep = reps[s]
+                run = rep.running
+                if not rep.queue and len(run) < conc and s not in due:
+                    # immediate start == queue-then-start this sub-tick
+                    finish = t + svc[i] * (1.0 + 0.15 * len(run))
+                    run.append((finish, i))
+                    heapq.heappush(heap, (finish, s))
+                    continue
+                a = arr[i]
+                rep.queue.append(i)
+                rep.qage.append(a)
+                touched.add(s)
+                qn += 1
+                if a < qmin:
+                    qmin = a
+                if a < rep.qmin:
+                    rep.qmin = a
+            self._rr_cursor = cur
+        else:
+            # least-loaded waterfill: sequentially assign each request to
+            # argmin (load, rtt, id) — the pick the legacy LB's min() makes
+            ready_reps = self._ready_reps
+            loads = self._loads
+            ids = self._ids
+            cols = self._cols
+            rcode = self._rcode_l
+            nready = len(ready)
+            rng = range(1, nready)
+            for i in pending:
+                if check_to and t - arr[i] > timeout:
+                    self.failed += 1
+                    continue
+                rc = rcode[i]
+                col = cols.get(rc)
+                if col is None:
+                    col = cols[rc] = [r.rtt[rc] for r in ready_reps]
+                best, bl, br, bi = 0, loads[0], col[0], ids[0]
+                for j in rng:
+                    lj = loads[j]
+                    if lj > bl:
+                        continue
+                    if lj < bl or col[j] < br or (
+                        col[j] == br and ids[j] < bi
+                    ):
+                        best, bl, br, bi = j, lj, col[j], ids[j]
+                loads[best] += 1
+                rep = ready_reps[best]
+                run = rep.running
+                if not rep.queue and len(run) < conc \
+                        and rep.slot not in due:
+                    finish = t + svc[i] * (1.0 + 0.15 * len(run))
+                    run.append((finish, i))
+                    heapq.heappush(heap, (finish, rep.slot))
+                    continue
+                a = arr[i]
+                rep.queue.append(i)
+                rep.qage.append(a)
+                touched.add(rep.slot)
+                qn += 1
+                if a < qmin:
+                    qmin = a
+                if a < rep.qmin:
+                    rep.qmin = a
+        self._qn += qn
+        self._qmin = qmin
+        # with ready replicas, every non-expired request was routed
+        self._pending = []
+        self._pmin = _INF
+
+    # ------------------------------------------------------------------
+    def _step(self, t: float, slots: Sequence[int], due: Set[int],
+              expire: bool) -> None:
+        arr = self._arr_l
+        svc = self._svc_l
+        rcode = self._rcode_l
+        timeout = self.timeout_s
+        conc = self.concurrency
+        heap = self._heap
+        reps = self._reps
+        loads = self._loads
+        pos = self._pos
+        for s in slots:
+            rep = reps[s]
+            run = rep.running
+            # completions (in start order, like the legacy running list)
+            if s in due:
+                still: List[Tuple[float, int]] = []
+                n_done = 0
+                for f, i in run:
+                    if f <= t:
+                        e2e = (f - arr[i]) + rep.rtt[rcode[i]]
+                        if e2e > timeout:
+                            self.failed += 1
+                        else:
+                            self.latencies.append(e2e)
+                            self.completed += 1
+                        n_done += 1
+                    else:
+                        still.append((f, i))
+                rep.running = run = still
+                loads[pos[s]] -= n_done
+            # queue expiry (client hung up past its timeout).  Expired
+            # entries are almost always a FIFO prefix, so pop from the
+            # front; the post-pop min detects the rare mid-queue stragglers
+            # (retried requests carry their original arrival time).
+            q = rep.queue
+            if expire and q and t - rep.qmin > timeout:
+                ages = rep.qage
+                nq = len(q)
+                k = 0
+                while k < nq and t - ages[k] > timeout:
+                    k += 1
+                if k:
+                    del q[:k]
+                    del ages[:k]
+                    self.failed += k
+                    self._qn -= k
+                    loads[pos[s]] -= k
+                if ages:
+                    qmin = min(ages)
+                    if t - qmin > timeout:
+                        kept: List[int] = []
+                        kept_a: List[float] = []
+                        n_exp = 0
+                        for i, a in zip(q, ages):
+                            if t - a > timeout:
+                                n_exp += 1
+                            else:
+                                kept.append(i)
+                                kept_a.append(a)
+                        rep.queue = q = kept
+                        rep.qage = ages = kept_a
+                        self.failed += n_exp
+                        self._qn -= n_exp
+                        loads[pos[s]] -= n_exp
+                        qmin = min(ages) if ages else _INF
+                    rep.qmin = qmin
+                else:
+                    rep.qmin = _INF
+            # starts: pull queued work into free slots
+            if q and len(run) < conc:
+                j = 0
+                nq = len(q)
+                while j < nq and len(run) < conc:
+                    i = q[j]
+                    j += 1
+                    finish = t + svc[i] * (1.0 + 0.15 * len(run))
+                    run.append((finish, i))
+                    heapq.heappush(heap, (finish, s))
+                del q[:j]
+                del rep.qage[:j]
+                self._qn -= j
+
+    # ------------------------------------------------------------------
+    def run(self, duration_s: Optional[float] = None) -> ServingResult:
+        base = self.cluster.run(duration_s)
+        # drain: anything still pending/in-flight past the horizon fails
+        self.failed += len(self._pending)
+        for rep in self._reps:
+            self.failed += rep.load
+        return ServingResult(
+            policy=self.cluster.policy.name,
+            trace=self.cluster.trace.name,
+            workload=self.workload_name,
+            n_requests=self._ptr,
+            n_completed=self.completed,
+            n_failed=self.failed,
+            latencies_s=np.asarray(self.latencies),
+            total_cost=base.total_cost,
+            spot_cost=base.spot_cost,
+            od_cost=base.od_cost,
+            cost_vs_ondemand=base.cost_vs_ondemand,
+            availability=base.availability,
+            n_preemptions=base.n_preemptions,
+            n_launch_failures=base.n_launch_failures,
+        )

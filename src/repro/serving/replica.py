@@ -7,8 +7,9 @@ kills the replica; its in-flight requests fail and are retried client-side
 (the failure time counts into end-to-end latency — §5.1 methodology).
 
 In simulation the replica is an M/G/c-style server: ``concurrency`` slots,
-FIFO queue, service times from the latency model.  In live mode the same
-object fronts a ``repro.serving.engine.Engine``.
+FIFO queue, service times from the latency model.  (The vectorized engine
+in ``repro.serving.engine`` replicates this exact behavior with array
+state instead of one object per replica.)
 """
 
 from __future__ import annotations

@@ -125,6 +125,9 @@ class ServingSimulator:
             tick_hook=self._tick,
         )
         self.cluster.add_preempt_listener(self._on_dead)
+        # scale-downs retire instances from the cluster's scan list, so the
+        # replica layer must hear about them here (not via _sync_replicas)
+        self.cluster.add_terminate_listener(self._on_dead)
 
     # ------------------------------------------------------------------
     def _sync_replicas(self, now: float) -> None:
