@@ -21,6 +21,34 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 # Instance types
 # ---------------------------------------------------------------------------
 
+# Published peak HBM bandwidth per accelerator, bytes/s.  This is the
+# single source the roofline latency model draws from (decode is
+# HBM-bound: weights re-read per token), so an accelerator missing here
+# is a hard error at InstanceType construction — not a silent 0.8 TB/s
+# guess three layers down in ``serving/latency.py``.
+ACCEL_HBM_BYTES_PER_S: Mapping[str, float] = {
+    "A100": 2.0e12,
+    "V100": 0.9e12,
+    "T4": 0.3e12,
+    "A10G": 0.6e12,
+    "K80": 0.24e12,
+    "TPUv5e": 0.819e12,
+}
+
+
+def hbm_bandwidth(accelerator: str) -> float:
+    """Peak HBM bytes/s for a known accelerator name; raises otherwise."""
+    try:
+        return ACCEL_HBM_BYTES_PER_S[accelerator]
+    except KeyError:
+        known = sorted(ACCEL_HBM_BYTES_PER_S)
+        raise KeyError(
+            f"unknown accelerator {accelerator!r}: no HBM bandwidth on "
+            f"record (known: {known}); add it to "
+            "cluster.catalog.ACCEL_HBM_BYTES_PER_S or construct the "
+            "InstanceType with an explicit hbm_bytes_per_s"
+        ) from None
+
 
 @dataclasses.dataclass(frozen=True)
 class InstanceType:
@@ -30,6 +58,10 @@ class InstanceType:
     instance belongs to; per-zone price wobble is added by the catalog (the
     paper notes spot prices are stable in time but differ slightly across
     zones/regions).
+
+    ``hbm_bytes_per_s`` (peak, per accelerator) resolves from
+    :data:`ACCEL_HBM_BYTES_PER_S` by accelerator name when not given;
+    an unknown accelerator with no explicit value raises at construction.
     """
 
     name: str
@@ -40,6 +72,13 @@ class InstanceType:
     spot_ratio: float           # spot price as fraction of on-demand
     hbm_gib_per_accel: float = 16.0
     peak_bf16_tflops: float = 197.0  # per accelerator (v5e default)
+    hbm_bytes_per_s: Optional[float] = None  # per accelerator, peak
+
+    def __post_init__(self) -> None:
+        if self.hbm_bytes_per_s is None:
+            object.__setattr__(
+                self, "hbm_bytes_per_s", hbm_bandwidth(self.accelerator)
+            )
 
     @property
     def spot_price(self) -> float:

@@ -8,6 +8,10 @@ Each kernel ships three artifacts:
                    in Python for correctness validation),
 * ``ref.py``     — pure-jnp oracles the tests ``assert_allclose`` against.
 
+``compat.py`` absorbs Pallas TPU API drift across JAX versions
+(``TPUCompilerParams`` vs ``CompilerParams``, the VMEM handle); kernels
+never touch ``jax.experimental.pallas.tpu`` symbols directly.
+
 Kernels:
 
 * ``flash_attention``  — prefill attention (online softmax, causal /
@@ -22,6 +26,6 @@ for fp32 / (16, 128) for bf16; all BlockSpecs here keep the last dim a
 multiple of 128 and the second-minor a multiple of the sublane count.
 """
 
-from repro.kernels import ops, ref
+from repro.kernels import compat, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["compat", "ops", "ref"]

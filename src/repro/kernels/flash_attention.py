@@ -23,7 +23,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels import compat
 
 NEG_INF = -1e30
 
@@ -179,11 +180,11 @@ def flash_attention_bhsd(
         ),
         out_shape=jax.ShapeDtypeStruct((B, H, Sq + pad_q, D), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q,), jnp.float32),
-            pltpu.VMEM((block_q, D), jnp.float32),
+            compat.VMEM((block_q,), jnp.float32),
+            compat.VMEM((block_q,), jnp.float32),
+            compat.VMEM((block_q, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

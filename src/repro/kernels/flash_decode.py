@@ -20,7 +20,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels import compat
 
 NEG_INF = -1e30
 
@@ -112,11 +113,11 @@ def flash_decode_bhd(
         out_specs=pl.BlockSpec((1, 1, D), lambda b, h, j: (b, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1,), jnp.float32),
-            pltpu.VMEM((1, D), jnp.float32),
+            compat.VMEM((1,), jnp.float32),
+            compat.VMEM((1,), jnp.float32),
+            compat.VMEM((1, D), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -16,7 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels import compat
 
 
 def _kernel(x_ref, w_ref, o_ref, acc_scr, *, n_d: int):
@@ -82,8 +83,8 @@ def moe_gmm_ecf(
         out_shape=jax.ShapeDtypeStruct(
             (E, C + pad_c, F + pad_f), x.dtype
         ),
-        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.VMEM((block_c, block_f), jnp.float32)],
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

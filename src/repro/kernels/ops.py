@@ -3,6 +3,15 @@
 ``interpret`` defaults to True off-TPU (the kernel body executes in Python
 on CPU for correctness); on TPU backends the compiled kernels run.  Model
 code calls these through ``impl="pallas"``.
+
+Backend detection happens HERE, in the plain-Python wrappers, before the
+jitted inner functions are entered.  ``interpret`` is a static argument,
+so resolving it inside the traced body would bake ``jax.default_backend()``
+at first-trace time into the cache entry for ``interpret=None`` — a later
+call under a different backend (e.g. a CPU fallback after TPU init, or a
+``jax.default_device`` context) would silently reuse the stale choice.
+Resolved pre-jit, every distinct backend decision gets its own cache
+entry keyed on the concrete boolean.
 """
 
 from __future__ import annotations
@@ -20,6 +29,7 @@ from repro.kernels.selective_scan import selective_scan_bqcn
 
 
 def _default_interpret() -> bool:
+    """Interpret off-TPU.  Must only be called from un-jitted code."""
     return jax.default_backend() != "tpu"
 
 
@@ -28,20 +38,18 @@ def _default_interpret() -> bool:
     static_argnames=("causal", "window", "prefix_len", "block_q",
                      "block_kv", "interpret"),
 )
-def flash_attention(
-    q: jax.Array,                 # model layout (B, S, H, D)
-    k: jax.Array,                 # (B, S, Kv, D)
+def _flash_attention_jit(
+    q: jax.Array,
+    k: jax.Array,
     v: jax.Array,
     *,
-    causal: bool = True,
-    window: Optional[int] = None,
-    prefix_len: int = 0,
-    block_q: int = 128,
-    block_kv: int = 128,
-    interpret: Optional[bool] = None,
+    causal: bool,
+    window: Optional[int],
+    prefix_len: int,
+    block_q: int,
+    block_kv: int,
+    interpret: bool,
 ) -> jax.Array:
-    if interpret is None:
-        interpret = _default_interpret()
     out = flash_attention_bhsd(
         q.transpose(0, 2, 1, 3),
         k.transpose(0, 2, 1, 3),
@@ -56,20 +64,43 @@ def flash_attention(
     return out.transpose(0, 2, 1, 3)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_kv", "interpret")
-)
-def flash_decode(
-    q: jax.Array,                 # (B, 1, H, D) model layout
-    k_cache: jax.Array,           # (B, S, Kv, D)
-    v_cache: jax.Array,
+def flash_attention(
+    q: jax.Array,                 # model layout (B, S, H, D)
+    k: jax.Array,                 # (B, S, Kv, D)
+    v: jax.Array,
     *,
-    kv_valid: jax.Array,          # (B, S)
-    block_kv: int = 512,
+    causal: bool = True,
+    window: Optional[int] = None,
+    prefix_len: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     if interpret is None:
         interpret = _default_interpret()
+    return _flash_attention_jit(
+        q, k, v,
+        causal=causal,
+        window=window,
+        prefix_len=prefix_len,
+        block_q=block_q,
+        block_kv=block_kv,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_kv", "interpret")
+)
+def _flash_decode_jit(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    kv_valid: jax.Array,
+    *,
+    block_kv: int,
+    interpret: bool,
+) -> jax.Array:
     out = flash_decode_bhd(
         q[:, 0],
         k_cache.transpose(0, 2, 1, 3),
@@ -81,9 +112,39 @@ def flash_decode(
     return out[:, None]
 
 
+def flash_decode(
+    q: jax.Array,                 # (B, 1, H, D) model layout
+    k_cache: jax.Array,           # (B, S, Kv, D)
+    v_cache: jax.Array,
+    *,
+    kv_valid: jax.Array,          # (B, S)
+    block_kv: int = 512,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = _default_interpret()
+    return _flash_decode_jit(
+        q, k_cache, v_cache, kv_valid,
+        block_kv=block_kv, interpret=interpret,
+    )
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_c", "interpret")
 )
+def _selective_scan_jit(
+    a: jax.Array,
+    b: jax.Array,
+    h0: jax.Array,
+    *,
+    block_c: int,
+    interpret: bool,
+) -> jax.Array:
+    return selective_scan_bqcn(
+        a, b, h0, block_c=block_c, interpret=interpret
+    )
+
+
 def selective_scan(
     a: jax.Array,                 # (B, Q, C, N)
     b: jax.Array,
@@ -98,12 +159,21 @@ def selective_scan(
     bc = block_c
     while C % bc:
         bc //= 2
-    return selective_scan_bqcn(
+    return _selective_scan_jit(
         a, b, h0, block_c=max(bc, 1), interpret=interpret
     )
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
+def _moe_gmm_jit(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    interpret: bool,
+) -> jax.Array:
+    return moe_gmm_ecf(x, w, interpret=interpret)
+
+
 def moe_gmm(
     x: jax.Array,                 # (E, C, D)
     w: jax.Array,                 # (E, D, F)
@@ -112,7 +182,7 @@ def moe_gmm(
 ) -> jax.Array:
     if interpret is None:
         interpret = _default_interpret()
-    return moe_gmm_ecf(x, w, interpret=interpret)
+    return _moe_gmm_jit(x, w, interpret=interpret)
 
 
 def moe_ffn(
@@ -125,6 +195,8 @@ def moe_ffn(
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Full expert FFN via the grouped-matmul kernel."""
+    if interpret is None:
+        interpret = _default_interpret()
     h = moe_gmm(xe, wi, interpret=interpret)
     a = jax.nn.silu if act == "silu" else jax.nn.gelu
     if wg is not None:

@@ -21,7 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels import compat
 
 
 def _kernel(a_ref, b_ref, h0_ref, o_ref, h_scr, *, chunk: int):
@@ -64,8 +65,8 @@ def selective_scan_bqcn(
             (1, Q, block_c, N), lambda b_, c: (b_, 0, c, 0)
         ),
         out_shape=jax.ShapeDtypeStruct((B, Q, C, N), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((block_c, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.VMEM((block_c, N), jnp.float32)],
+        compiler_params=compat.compiler_params(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

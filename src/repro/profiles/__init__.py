@@ -1,0 +1,36 @@
+"""Kernel step-time profiles: measured grounding for serving latencies.
+
+The serving layer's roofline latency model prices every request from two
+efficiency fractions (prefill MFU, decode MBU).  This package measures
+them on the repo's own Pallas kernels — per model config, per target
+instance type — and persists versioned JSON step-time tables under
+``artifacts/profiles/`` that ``ProfiledLatencyModel`` loads when a
+``ServiceSpec`` opts in with ``latency: {source: profile}``.
+
+* ``schema``   — the versioned artifact contract (``ProfileEntry`` /
+  ``ProfileTable`` / ``load_profiles``),
+* ``profiler`` — kernel micro-benchmarks (interpret on CPU, compiled on
+  TPU),
+* ``run``      — the ``python -m repro.profiles.run`` CLI.
+"""
+
+from repro.profiles.profiler import profile_model, profile_models
+from repro.profiles.schema import (
+    DEFAULT_PROFILE_DIR,
+    SCHEMA_VERSION,
+    ProfileEntry,
+    ProfileSchemaError,
+    ProfileTable,
+    load_profiles,
+)
+
+__all__ = [
+    "DEFAULT_PROFILE_DIR",
+    "SCHEMA_VERSION",
+    "ProfileEntry",
+    "ProfileSchemaError",
+    "ProfileTable",
+    "load_profiles",
+    "profile_model",
+    "profile_models",
+]

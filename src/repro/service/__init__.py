@@ -27,6 +27,7 @@ from repro.service.loader import (
 from repro.service.service import Service
 from repro.service.spec import (
     AutoscalerSpec,
+    LatencySpec,
     PlacementFilter,
     ReplicaPolicySpec,
     ResourceSpec,
@@ -39,6 +40,7 @@ from repro.service.spec import (
 
 __all__ = [
     "AutoscalerSpec",
+    "LatencySpec",
     "PlacementFilter",
     "ReplicaPolicySpec",
     "ResolvedService",

@@ -22,6 +22,7 @@ from repro.configs import get_config
 from repro.core.autoscaler import Autoscaler, ConstantTarget, LoadAutoscaler
 from repro.core.policy import Policy, make_policy
 from repro.models.config import ModelConfig
+from repro.serving.latency import make_latency_model
 from repro.serving.load_balancer import (
     LeastLoadedBalancer,
     LoadBalancer,
@@ -188,11 +189,19 @@ def build_service(
         ServingSimulator if sim_spec.engine == "legacy"
         else VectorizedServingEngine
     )
+    model_cfg = get_config(spec.model)
+    latency_model = make_latency_model(
+        model_cfg,
+        catalog.instance_type(spec.resources.instance_type),
+        model_id=spec.model,
+        source=spec.latency.source,
+        profile=spec.latency.profile,
+    )
     simulator = engine_cls(
         trace,
         policy,
         reqs,
-        get_config(spec.model),
+        model_cfg,
         itype=spec.resources.instance_type,
         catalog=catalog,
         autoscaler=autoscaler,
@@ -209,6 +218,7 @@ def build_service(
         sub_step_s=sub_step,
         workload_name=spec.workload.kind,
         concurrency=sim_spec.concurrency,
+        latency_model=latency_model,
     )
     return ResolvedService(
         spec=spec,

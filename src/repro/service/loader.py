@@ -17,6 +17,7 @@ from typing import Any, Mapping, Optional
 
 from repro.service.spec import (
     AutoscalerSpec,
+    LatencySpec,
     PlacementFilter,
     ReplicaPolicySpec,
     ResourceSpec,
@@ -160,7 +161,8 @@ def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
     _check_keys(
         d,
         ("name", "model", "trace", "resources", "replica_policy",
-         "autoscaler", "workload", "sim", "load_balancer", "sweep"),
+         "autoscaler", "workload", "latency", "sim", "load_balancer",
+         "sweep"),
         "service spec",
     )
     try:
@@ -178,6 +180,9 @@ def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
         )
         kw["workload"] = WorkloadSpec(
             **_pick(_section(d, "workload"), WorkloadSpec, "workload")
+        )
+        kw["latency"] = LatencySpec(
+            **_pick(_section(d, "latency"), LatencySpec, "latency")
         )
         kw["sim"] = SimSpec(**_pick(_section(d, "sim"), SimSpec, "sim"))
         if d.get("sweep") is not None:

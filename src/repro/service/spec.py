@@ -44,6 +44,7 @@ __all__ = [
     "ReplicaPolicySpec",
     "AutoscalerSpec",
     "WorkloadSpec",
+    "LatencySpec",
     "SimSpec",
     "SweepSpec",
     "ServiceSpec",
@@ -303,6 +304,48 @@ class WorkloadSpec:
 
 
 # ---------------------------------------------------------------------------
+# Latency source (roofline vs. measured kernel profiles)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencySpec:
+    """Where replica service times come from.
+
+    ``source="roofline"`` (default) prices requests with the analytic
+    hardware model — the historical behaviour, byte-identical golden
+    metrics.  ``source="profile"`` loads a ``repro.profiles`` step-time
+    table and uses the kernel-measured MFU/MBU for this (model,
+    accelerator) pair; when no matching profile entry exists the run
+    warns and falls back to the roofline, so specs stay portable.
+    ``profile`` points at a table JSON or a directory of them
+    (default: ``artifacts/profiles/``).
+    """
+
+    source: str = "roofline"
+    profile: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        # single source of truth for valid sources is the serving layer
+        # (deferred import keeps spec module import cheap)
+        from repro.serving.latency import LATENCY_SOURCES
+
+        _require(
+            self.source in LATENCY_SOURCES,
+            f"latency.source must be one of {list(LATENCY_SOURCES)}, "
+            f"got {self.source!r}",
+        )
+        if self.profile is not None:
+            _require(
+                bool(self.profile),
+                "latency.profile must be a non-empty path when set",
+            )
+
+    def to_dict(self) -> Dict[str, Any]:
+        return _clean({"source": self.source, "profile": self.profile})
+
+
+# ---------------------------------------------------------------------------
 # Simulation horizon / fabric knobs
 # ---------------------------------------------------------------------------
 
@@ -464,6 +507,7 @@ class ServiceSpec:
         default_factory=AutoscalerSpec
     )
     workload: WorkloadSpec = dataclasses.field(default_factory=WorkloadSpec)
+    latency: LatencySpec = dataclasses.field(default_factory=LatencySpec)
     sim: SimSpec = dataclasses.field(default_factory=SimSpec)
     load_balancer: str = "least_loaded"
     sweep: Optional[SweepSpec] = None
@@ -540,6 +584,7 @@ class ServiceSpec:
             "replica_policy": self.replica_policy.to_dict(),
             "autoscaler": self.autoscaler.to_dict(),
             "workload": self.workload.to_dict(),
+            "latency": self.latency.to_dict(),
             "sim": self.sim.to_dict(),
             "load_balancer": self.load_balancer,
         }

@@ -14,13 +14,19 @@ Live token-serving (real JAX prefill/decode) lives in
 """
 
 from repro.serving.engine import VectorizedServingEngine
-from repro.serving.latency import LatencyModel
+from repro.serving.latency import (
+    LatencyModel,
+    ProfiledLatencyModel,
+    make_latency_model,
+)
 from repro.serving.load_balancer import LeastLoadedBalancer, RoundRobinBalancer
 from repro.serving.replica import Replica, ReplicaState
 from repro.serving.sim import ServingSimulator, ServingResult
 
 __all__ = [
     "LatencyModel",
+    "ProfiledLatencyModel",
+    "make_latency_model",
     "LeastLoadedBalancer",
     "RoundRobinBalancer",
     "Replica",

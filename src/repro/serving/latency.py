@@ -1,4 +1,4 @@
-"""Roofline-derived request latency model per (model config × instance).
+"""Request latency models per (model config × instance): roofline + profiled.
 
 The paper's Fig. 6a decomposes a Vicuna-13B request: model execution time
 (prefill + per-token decode) dominates; network RTT is tens of ms.  We
@@ -9,17 +9,40 @@ times are grounded in the same hardware model as the §Roofline analysis:
     decode_s_per_tok  = weight bytes / (accels × HBM_bw) / MBU_decode
     service_s(req)    = prefill + out_tokens × decode + overhead
 
-Prefill is compute-bound (MFU ~0.45 on a tuned engine); decode is
-HBM-bound (weights re-read per token; MBU ~0.7).  The same model yields a
-replica's max concurrency from its HBM capacity (KV per request).
+Prefill is compute-bound; decode is HBM-bound (weights re-read per
+token).  :class:`LatencyModel` uses literature-typical efficiency
+constants (MFU ~0.45 on a tuned engine, MBU ~0.7);
+:class:`ProfiledLatencyModel` replaces those constants with efficiencies
+*measured* on this repo's Pallas kernels by ``repro.profiles`` — same
+roofline structure, measured numerator.  ``make_latency_model`` picks
+between them from a ``ServiceSpec``'s ``latency:`` section, falling back
+to the analytic roofline when no profile entry matches, so default runs
+(and the golden metrics) are byte-identical with or without profile
+artifacts on disk.
+
+Peak HBM bandwidth lives on :class:`repro.cluster.catalog.InstanceType`
+(resolved from ``ACCEL_HBM_BYTES_PER_S`` by accelerator name — unknown
+accelerators raise at catalog construction instead of silently serving
+from a guessed 0.8 TB/s part).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
+from typing import Optional, TYPE_CHECKING
 
 from repro.cluster.catalog import InstanceType
 from repro.models.config import ModelConfig
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (typing only)
+    from repro.profiles.schema import ProfileEntry
+
+__all__ = [
+    "LatencyModel",
+    "ProfiledLatencyModel",
+    "make_latency_model",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,13 +84,13 @@ class LatencyModel:
 
     @property
     def hbm_bytes_per_s(self) -> float:
-        # scale HBM bw with the accelerator class (A100 2 TB/s, V100
-        # 0.9 TB/s, T4 0.3 TB/s, A10G 0.6 TB/s, v5e 0.819 TB/s)
-        bw = {
-            "A100": 2.0e12, "V100": 0.9e12, "T4": 0.3e12,
-            "A10G": 0.6e12, "K80": 0.24e12, "TPUv5e": 0.819e12,
-        }.get(self.itype.accelerator, 0.8e12)
-        return self.itype.accel_count * bw * self.mbu_decode
+        # peak per-accelerator bandwidth comes from the instance catalog
+        # (cluster.catalog.ACCEL_HBM_BYTES_PER_S keyed by accelerator)
+        return (
+            self.itype.accel_count
+            * self.itype.hbm_bytes_per_s
+            * self.mbu_decode
+        )
 
     # ------------------------------------------------------------------
     def prefill_s(self, prompt_tokens: int) -> float:
@@ -104,3 +127,87 @@ class LatencyModel:
             )
             return max(1, int(free / kv_per_req))
         return 32
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfiledLatencyModel(LatencyModel):
+    """Roofline latency with kernel-measured MFU/MBU.
+
+    Identical service-time structure to :class:`LatencyModel`; the
+    ``mfu_prefill`` / ``mbu_decode`` efficiency fractions come from a
+    ``repro.profiles`` step-time table instead of hand-waved constants.
+    Provenance rides along so a result can always answer "which profile
+    priced this run, measured where, in which mode".
+    """
+
+    profile_path: str = ""
+    profile_backend: str = ""       # jax backend the measurement ran on
+    profile_mode: str = ""          # "interpret" | "compiled"
+
+    @classmethod
+    def from_entry(
+        cls,
+        cfg: ModelConfig,
+        itype: InstanceType,
+        entry: "ProfileEntry",
+        *,
+        path: str = "",
+        n_params: float = 0.0,
+    ) -> "ProfiledLatencyModel":
+        n = n_params or float(cfg.approx_params())
+        return cls(
+            cfg=cfg,
+            itype=itype,
+            n_params=n,
+            mfu_prefill=entry.mfu_prefill,
+            mbu_decode=entry.mbu_decode,
+            profile_path=path,
+            profile_backend=entry.backend,
+            profile_mode=entry.mode,
+        )
+
+
+LATENCY_SOURCES = ("roofline", "profile")
+
+
+def make_latency_model(
+    cfg: ModelConfig,
+    itype: InstanceType,
+    *,
+    model_id: str,
+    source: str = "roofline",
+    profile: Optional[str] = None,
+) -> LatencyModel:
+    """Build the latency model a ``ServiceSpec``'s ``latency:`` asks for.
+
+    ``source="roofline"`` (the default) is the analytic model —
+    bit-identical to the historical behaviour.  ``source="profile"``
+    loads the step-time table(s) at ``profile`` (a JSON file or a
+    directory of them; defaults to ``artifacts/profiles/``) and looks up
+    ``(model_id, itype.accelerator)``; when no table or no matching entry
+    exists it *warns and falls back to the roofline* rather than failing
+    the run, so specs stay portable across machines with and without
+    profile artifacts.
+    """
+    if source not in LATENCY_SOURCES:
+        raise ValueError(
+            f"latency source must be one of {list(LATENCY_SOURCES)}, "
+            f"got {source!r}"
+        )
+    if source == "roofline":
+        return LatencyModel.for_model(cfg, itype)
+
+    from repro.profiles.schema import DEFAULT_PROFILE_DIR, load_profiles
+
+    path = profile or DEFAULT_PROFILE_DIR
+    table = load_profiles(path, missing_ok=True)
+    entry = table.lookup(model_id, itype.accelerator)
+    if entry is None:
+        warnings.warn(
+            f"latency source 'profile': no profile entry for "
+            f"({model_id!r}, {itype.accelerator!r}) under {path!r}; "
+            "falling back to the analytic roofline model",
+            stacklevel=2,
+        )
+        return LatencyModel.for_model(cfg, itype)
+    return ProfiledLatencyModel.from_entry(cfg, itype, entry, path=str(path))

@@ -89,11 +89,18 @@ class ServingSimulator:
         sub_step_s: float = 1.0,
         workload_name: str = "workload",
         concurrency: Optional[int] = None,
+        latency_model: Optional[LatencyModel] = None,
     ) -> None:
         self.catalog = catalog or default_catalog()
         self.cfg = cfg
         self.itype = self.catalog.instance_type(itype)
-        self.latency_model = LatencyModel.for_model(cfg, self.itype)
+        # an injected model (e.g. ProfiledLatencyModel from the spec's
+        # latency: section) replaces the default analytic roofline
+        self.latency_model = (
+            latency_model
+            if latency_model is not None
+            else LatencyModel.for_model(cfg, self.itype)
+        )
         self.lb = lb or LeastLoadedBalancer()
         self.timeout_s = timeout_s
         self.sub_step_s = sub_step_s

@@ -89,6 +89,29 @@ def test_golden_end_to_end_metrics(policy):
     assert res.availability == pytest.approx(want.availability, abs=1e-6)
 
 
+def test_golden_byte_identical_with_explicit_roofline_source():
+    """`latency: {source: roofline}` (the default, spelled out) must
+    reproduce the golden metrics byte-for-byte — the profile subsystem
+    must not perturb default-priced runs in any way."""
+    want = GOLDEN["spothedge"]
+    d = _spec("spothedge").to_dict()
+    assert d["latency"] == {"source": "roofline"}
+    res = Service(spec_from_dict(d)).run()        # explicit roofline
+    base = Service(_spec("spothedge")).run()      # implicit default
+    # bit-identical to the defaulted run...
+    assert res.n_requests == base.n_requests
+    assert res.n_completed == base.n_completed
+    assert res.n_failed == base.n_failed
+    assert res.total_cost == base.total_cost
+    assert float(res.pct(50)) == float(base.pct(50))
+    assert float(res.pct(99)) == float(base.pct(99))
+    # ...and on the pinned golden numbers
+    assert res.n_requests == want.n_requests
+    assert res.total_cost == pytest.approx(want.total_cost, abs=1e-6)
+    assert res.pct(50) == pytest.approx(want.p50_s, abs=1e-6)
+    assert res.pct(99) == pytest.approx(want.p99_s, abs=1e-6)
+
+
 def test_golden_is_reproducible_within_process():
     """Two runs of the same spec are bit-identical (no hidden state)."""
     a = Service(_spec("spothedge")).run()
