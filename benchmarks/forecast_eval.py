@@ -1,0 +1,157 @@
+"""Forecaster evaluation: backtests vs. persistence + risk-aware serving.
+
+Two questions, one driver:
+
+1. **Do the learned forecasters beat persistence?**  Every registered
+   forecaster is backtested over the named traces (Brier score of the
+   availability forecast, averaged over the 5/15/30-minute horizons).
+   Per-(trace, forecaster) backtest artifacts land under
+   ``artifacts/forecast/``; the comparison table (with explicit
+   ``beats_persistence`` verdicts) lands in
+   ``artifacts/bench/forecast_eval.json``.
+
+2. **Does risk-aware placement pay off end to end?**  ``risk_spothedge``
+   vs. vanilla ``spothedge`` on every named trace through the
+   scenario-matrix engine (availability/cost focus: ``workload: none``,
+   constant N_Tar — the Fig. 14 setting).  The ScenarioReport lands in
+   ``artifacts/bench/scenario_forecast_risk.json``.
+
+    PYTHONPATH=src python -m benchmarks.forecast_eval [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List, Optional, Sequence
+
+from benchmarks.common import emit_csv, run_suite, save
+from repro.cluster.traces import load_trace
+from repro.experiments import Scenario, ScenarioSuite
+from repro.forecast import registered_forecasters, run_backtest
+from repro.service import spec_from_dict
+
+TRACES = ("aws-1", "aws-2", "aws-3", "gcp-1")
+
+#: serving-comparison horizon per trace (capped by trace length)
+MAX_DAYS = 7.0
+
+
+def eval_forecasters(
+    traces: Sequence[str] = TRACES,
+    *,
+    max_steps: Optional[int] = None,
+    art_dir: str = "artifacts/forecast",
+) -> List[Dict]:
+    """Backtest every registered forecaster on every trace."""
+    rows: List[Dict] = []
+    baseline: Dict[str, float] = {}
+    for tname in traces:
+        trace = load_trace(tname)
+        for fc in registered_forecasters():
+            report = run_backtest(trace, fc, max_steps=max_steps)
+            report.save(art_dir)
+            row: Dict = {
+                "trace": tname,
+                "forecaster": fc,
+                "mean_brier_avail": round(report.mean_brier_avail, 6),
+            }
+            for h in report.horizons:
+                m = int(h.seconds / 60)
+                row[f"brier_{m}min"] = round(h.brier_avail, 6)
+                row[f"hit_{m}min"] = round(h.hit_rate, 6)
+            rows.append(row)
+            if fc == "persistence":
+                baseline[tname] = report.mean_brier_avail
+    for row in rows:
+        if row["forecaster"] != "persistence":
+            row["beats_persistence"] = bool(
+                row["mean_brier_avail"] < baseline[row["trace"]]
+            )
+    return rows
+
+
+def build_serving_suite(
+    traces: Sequence[str] = TRACES, *, quick: bool = False
+) -> ScenarioSuite:
+    """risk_spothedge vs. spothedge per trace, availability/cost focus.
+
+    Programmatic scenarios (not a ``sweep:`` grid) because each trace
+    gets its own horizon: the full trace up to ``MAX_DAYS``.
+    """
+    scenarios: List[Scenario] = []
+    for tname in traces:
+        trace = load_trace(tname)
+        hours = min(trace.duration_s / 3600.0, MAX_DAYS * 24.0)
+        if quick:
+            hours = min(hours, 24.0)
+        for policy in ("spothedge", "risk_spothedge"):
+            spec = spec_from_dict({
+                "name": f"forecast-risk-{policy}-{tname}",
+                "model": "llama3.2-1b",
+                "trace": tname,
+                "resources": {"instance_type": "p3.2xlarge"},
+                "replica_policy": {"name": policy},
+                "autoscaler": {"kind": "constant", "target": 4},
+                "workload": {"kind": "none"},
+                "forecast": {"name": "markov"},
+                "sim": {
+                    "duration_hours": hours,
+                    "control_interval_s": 30.0,
+                    "drain_s": 0.0,
+                    "seed": 0,
+                },
+            })
+            scenarios.append(
+                Scenario(labels={"policy": policy, "trace": tname},
+                         spec=spec)
+            )
+    return ScenarioSuite(scenarios, name="forecast_risk")
+
+
+def run(quick: bool = False) -> List[Dict]:
+    max_steps = 2000 if quick else None
+    rows = eval_forecasters(TRACES, max_steps=max_steps)
+    save("forecast_eval", rows)
+    emit_csv("forecast_eval", rows)
+
+    report = run_suite(build_serving_suite(TRACES, quick=quick),
+                       workers=None)
+    headline: List[Dict] = []
+    for tname in TRACES:
+        base = next(c for c in report.cells
+                    if c.labels == {"policy": "spothedge", "trace": tname})
+        risk = next(
+            c for c in report.cells
+            if c.labels == {"policy": "risk_spothedge", "trace": tname}
+        )
+        headline.append({
+            "trace": tname,
+            "avail_spothedge": round(base.availability, 6),
+            "avail_risk": round(risk.availability, 6),
+            "cost_spothedge": round(base.cost_vs_ondemand, 6),
+            "cost_risk": round(risk.cost_vs_ondemand, 6),
+            "preempt_spothedge": base.n_preemptions,
+            "preempt_risk": risk.n_preemptions,
+            "risk_wins": bool(
+                risk.availability >= base.availability
+                and risk.cost_vs_ondemand <= base.cost_vs_ondemand
+            ),
+        })
+    emit_csv("forecast_risk_headline", headline)
+    save("forecast_risk_headline", headline)
+    return rows
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="truncated backtests + 24h serving runs (CI)")
+    args = ap.parse_args(argv)
+    run(quick=args.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -1,0 +1,64 @@
+"""Quickstart: forecast spot availability, place replicas risk-aware.
+
+    PYTHONPATH=src python examples/risk_aware.py
+
+Three steps:
+
+1. inspect a trace's per-zone availability / preemption / correlation
+   stats (the signal the forecasters feed on);
+2. backtest the forecasters on that trace — the regional-Markov
+   estimator should beat the persistence baseline on Brier score;
+3. run vanilla SpotHedge vs. risk-aware SpotHedge end to end on the
+   same trace and compare availability, cost, and preemptions.
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+from repro.cluster.traces import load_trace, trace_stats
+from repro.forecast import run_backtest
+from repro.service import Service, spec_from_dict
+
+TRACE = "aws-1"
+
+# -- 1) what the forecasters see --------------------------------------------
+stats = trace_stats(load_trace(TRACE))
+print(f"{TRACE}: mean availability {stats['mean_availability']:.1%}")
+for zone, s in stats["zones"].items():
+    print(f"  {zone:<14s} avail={s['availability']:6.1%} "
+          f"preempt/day={s['preemptions_per_day']:5.1f} "
+          f"sibling r={s['mean_sibling_corr']:.2f}")
+
+# -- 2) can the predictors beat persistence? --------------------------------
+print("\nbacktest (Brier of the availability forecast, lower is better):")
+for name in ("persistence", "ewma", "markov"):
+    report = run_backtest(TRACE, name)
+    print(f"  {name:<12s} mean Brier = {report.mean_brier_avail:.4f}")
+
+# -- 3) does it pay off end to end? -----------------------------------------
+base = spec_from_dict({
+    "name": "risk-aware-demo",
+    "model": "llama3.2-1b",
+    "trace": TRACE,
+    "resources": {"instance_type": "p3.2xlarge"},
+    "replica_policy": {"name": "spothedge"},
+    "autoscaler": {"kind": "constant", "target": 4},
+    "workload": {"kind": "none"},            # availability/cost focus
+    "forecast": {"name": "markov"},          # consumed by risk_spothedge
+    "sim": {"duration_hours": 96.0, "control_interval_s": 30.0,
+            "drain_s": 0.0},
+})
+
+print("\nend to end (96h, N_Tar=4):")
+for policy in ("spothedge", "risk_spothedge"):
+    spec = dataclasses.replace(
+        base, replica_policy=dataclasses.replace(
+            base.replica_policy, name=policy
+        ),
+    )
+    res = Service(spec).run()
+    print(f"  {policy:<16s} avail={res.availability:.2%} "
+          f"cost={res.cost_vs_ondemand:.1%} of OD "
+          f"preempt={res.n_preemptions}")

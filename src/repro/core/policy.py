@@ -236,21 +236,31 @@ def register_policy(cls: type) -> type:
     return cls
 
 
-def make_policy(name: str, **kwargs) -> Policy:
-    """Instantiate a policy by its registered name (CLI / config entry)."""
+def _load_builtin() -> None:
     # Import for registration side effects.
     from repro.core import baselines as _b  # noqa: F401
     from repro.core import omniscient as _o  # noqa: F401
+    from repro.core import risk_aware as _r  # noqa: F401
     from repro.core import spothedge as _s  # noqa: F401
 
+
+def make_policy(name: str, **kwargs) -> Policy:
+    """Instantiate a policy by its registered name (CLI / config entry)."""
+    _load_builtin()
     if name not in _REGISTRY:
         raise KeyError(f"unknown policy {name!r}; have {sorted(_REGISTRY)}")
     return _REGISTRY[name](**kwargs)
 
 
-def registered_policies() -> List[str]:
-    from repro.core import baselines as _b  # noqa: F401
-    from repro.core import omniscient as _o  # noqa: F401
-    from repro.core import spothedge as _s  # noqa: F401
+def policy_class(name: str) -> type:
+    """The registered class for ``name`` (builders peek at class flags
+    like ``uses_forecast`` before instantiating)."""
+    _load_builtin()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown policy {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
 
+
+def registered_policies() -> List[str]:
+    _load_builtin()
     return sorted(_REGISTRY)

@@ -103,6 +103,12 @@ class SpotHedgePolicy(Policy):
             self._warned[zone] = now
 
     # -- SELECT-NEXT-ZONE (Alg. 1, line 17-23) -----------------------------
+    def _zone_rank_key(self, zone: str, now: float) -> tuple:
+        """Tie-break order among equally-loaded candidate zones.  Vanilla
+        SpotHedge ranks by spot price; RiskAwareSpotHedgePolicy overrides
+        this to rank by forecast preemption risk first."""
+        return (self._spot_price(zone), zone)
+
     def _select_next_zone(
         self, current_counts: Dict[str, int], now: float
     ) -> str:
@@ -122,14 +128,23 @@ class SpotHedgePolicy(Policy):
         # prioritize zones with fewer current spot placements, then price
         return min(
             pool,
-            key=lambda z: (current_counts.get(z, 0), self._spot_price(z), z),
+            key=lambda z: (
+                current_counts.get(z, 0),
+                *self._zone_rank_key(z, now),
+            ),
         )
 
     # -- the decision ----------------------------------------------------
+    def _spot_goal(self, obs: Observation) -> int:
+        """Launched-spot target S(t) + buffer.  Vanilla SpotHedge keeps a
+        constant ``N_Tar + N_Extra``; RiskAwareSpotHedgePolicy modulates
+        the buffer with the forecast (lean when calm, full when risky)."""
+        return obs.n_target + self.n_extra
+
     def decide(self, obs: Observation) -> List[Action]:
         actions: List[Action] = []
         n_tar = obs.n_target
-        spot_goal = n_tar + self.n_extra
+        spot_goal = self._spot_goal(obs)
 
         # 1) keep trying to reach N_Tar + N_Extra *launched* spot replicas
         counts = obs.spot_count_by_zone()
@@ -171,17 +186,16 @@ class SpotHedgePolicy(Policy):
         #    Ready replicas in recently-warned zones are discounted from S_r
         #    (the §4 warning extension) so the fallback launches *before*
         #    the preemption lands, shaving one cold start from the outage.
-        self._warned = {
-            z: t0
-            for z, t0 in self._warned.items()
-            if obs.now - t0 <= self.warning_ttl_s
-        }
-        at_risk = sum(
-            1 for inst in obs.spot_ready if inst.zone in self._warned
-        )
-        s_r_eff = obs.s_r - at_risk
+        s_r_eff = obs.s_r - self._at_risk_ready(obs)
         if self.dynamic_fallback:
-            od_needed = min(n_tar, n_tar + self.n_extra - s_r_eff)
+            # spot_goal == n_tar + n_extra for vanilla SpotHedge.  The
+            # risk-aware subclass may have trimmed the buffer — the
+            # fallback must chase the trimmed goal or it would backfill
+            # every trimmed spot replica with on-demand — but a *surged*
+            # goal is spot-only insurance and must not leak into O(t),
+            # hence the cap at the vanilla goal.
+            od_goal = min(spot_goal, n_tar + self.n_extra)
+            od_needed = min(n_tar, od_goal - s_r_eff)
             od_needed = max(od_needed, self.min_ondemand, 0)
         else:
             od_needed = self.min_ondemand
@@ -193,6 +207,21 @@ class SpotHedgePolicy(Policy):
         elif gap < 0:
             actions.extend(self._scale_down_od(obs, od_needed))
         return actions
+
+    # -- at-risk accounting (overridden by the risk-aware subclass) --------
+    def _at_risk_ready(self, obs: Observation) -> int:
+        """Ready spot replicas to discount from S_r when sizing the
+        on-demand fallback.  Vanilla SpotHedge counts replicas in
+        recently-warned zones; RiskAwareSpotHedgePolicy adds replicas in
+        zones whose *forecast* preemption risk crosses its threshold."""
+        self._warned = {
+            z: t0
+            for z, t0 in self._warned.items()
+            if obs.now - t0 <= self.warning_ttl_s
+        }
+        return sum(
+            1 for inst in obs.spot_ready if inst.zone in self._warned
+        )
 
     # -- introspection (used by tests + dashboards) ------------------------
     @property

@@ -38,10 +38,16 @@ from typing import (
 )
 
 from repro.cluster.traces import SpotTrace
+from repro.core.policy import policy_class
 from repro.experiments.report import CellResult, ScenarioReport
 from repro.service.builder import build_requests, build_service
 from repro.service.loader import load_spec
-from repro.service.spec import ServiceSpec, SpecError, SweepSpec
+from repro.service.spec import (
+    ForecastSpec,
+    ServiceSpec,
+    SpecError,
+    SweepSpec,
+)
 from repro.workloads import Request
 
 __all__ = ["Scenario", "ScenarioSuite"]
@@ -201,6 +207,9 @@ class ScenarioSuite:
         workloads = sweep.workloads or (base.workload,)
         # no seeds axis: every workload keeps its own declared seed
         seeds: Tuple[Optional[int], ...] = sweep.seeds or (None,)
+        # no forecasters axis: the base forecast section (if any) applies
+        # to every cell and no "forecaster" label column is emitted
+        forecasters: Tuple[Optional[str], ...] = sweep.forecasters or (None,)
 
         policy_labels = _disambiguate(
             [p.name for p in policies],
@@ -216,32 +225,53 @@ class ScenarioSuite:
         )
 
         scenarios: List[Scenario] = []
-        for (pol, plabel), tr, (wl, wlabel), seed in itertools.product(
+        for (pol, plabel), tr, (wl, wlabel), seed, fc in itertools.product(
             zip(policies, policy_labels),
             traces,
             zip(workloads, workload_labels),
             seeds,
+            forecasters,
         ):
+            if fc is not None and not getattr(
+                policy_class(pol.name), "uses_forecast", False
+            ):
+                # a forecaster axis is meaningless for policies that
+                # ignore the forecast section — expanding it would re-run
+                # byte-identical cells once per predictor.  Keep exactly
+                # one (unlabeled-forecaster) cell for such policies.
+                if fc != forecasters[0]:
+                    continue
+                fc = None
             wl_seeded = (
                 wl if seed is None else dataclasses.replace(wl, seed=seed)
             )
+            forecast = base.forecast
+            if fc is not None:
+                forecast = dataclasses.replace(
+                    base.forecast or ForecastSpec(), name=fc
+                )
             cell_spec = dataclasses.replace(
                 base,
                 name=(f"{base.name}-{plabel}-{tr}-{wlabel}"
-                      f"-s{wl_seeded.seed}"),
+                      f"-s{wl_seeded.seed}"
+                      + (f"-{fc}" if fc is not None else "")),
                 replica_policy=pol,
                 trace=tr,
                 workload=wl_seeded,
+                forecast=forecast,
                 sweep=None,
             )
+            labels = {
+                "policy": plabel,
+                "trace": tr,
+                "workload": wlabel,
+                "seed": wl_seeded.seed,
+            }
+            if fc is not None:
+                labels["forecaster"] = fc
             scenarios.append(
                 Scenario(
-                    labels={
-                        "policy": plabel,
-                        "trace": tr,
-                        "workload": wlabel,
-                        "seed": wl_seeded.seed,
-                    },
+                    labels=labels,
                     spec=cell_spec,
                     tape_key=_workload_tape_key(cell_spec),
                 )

@@ -1,0 +1,47 @@
+"""Spot-availability forecasting: predict zone risk before it bites.
+
+SpotHedge's dynamic placement is reactive — a zone only reaches ``Z_P``
+after a preemption or failed launch already cost a replica and a cold
+start.  This package closes that loop: :class:`Forecaster` implementations
+(persistence baseline, per-zone EWMA hazard, sibling-correlated regional
+Markov) turn the observation history the policies already receive into
+calibrated per-zone availability scores and preemption-risk estimates;
+``repro.core.risk_aware.RiskAwareSpotHedgePolicy`` consumes them to rank
+zones and pre-hedge on-demand, and :mod:`repro.forecast.backtest` replays
+any trace through a forecaster and scores it (Brier, hit rate,
+calibration) into versioned artifacts under ``artifacts/forecast/``.
+"""
+
+from repro.forecast.backtest import (
+    BacktestReport,
+    HorizonScore,
+    run_backtest,
+)
+from repro.forecast.base import (
+    Forecaster,
+    ZoneForecast,
+    infer_region,
+    make_forecaster,
+    register_forecaster,
+    registered_forecasters,
+)
+from repro.forecast.estimators import (
+    EWMAForecaster,
+    MarkovRegionalForecaster,
+    PersistenceForecaster,
+)
+
+__all__ = [
+    "BacktestReport",
+    "EWMAForecaster",
+    "Forecaster",
+    "HorizonScore",
+    "MarkovRegionalForecaster",
+    "PersistenceForecaster",
+    "ZoneForecast",
+    "infer_region",
+    "make_forecaster",
+    "register_forecaster",
+    "registered_forecasters",
+    "run_backtest",
+]

@@ -1,0 +1,8 @@
+"""CLI entry: ``python -m repro.forecast`` runs the backtest harness."""
+
+import sys
+
+from repro.forecast.backtest import main
+
+if __name__ == "__main__":
+    sys.exit(main())

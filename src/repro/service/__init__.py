@@ -27,6 +27,7 @@ from repro.service.loader import (
 from repro.service.service import Service
 from repro.service.spec import (
     AutoscalerSpec,
+    ForecastSpec,
     LatencySpec,
     PlacementFilter,
     ReplicaPolicySpec,
@@ -40,6 +41,7 @@ from repro.service.spec import (
 
 __all__ = [
     "AutoscalerSpec",
+    "ForecastSpec",
     "LatencySpec",
     "PlacementFilter",
     "ReplicaPolicySpec",

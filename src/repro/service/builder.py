@@ -20,7 +20,7 @@ from repro.cluster.simulator import SimConfig
 from repro.cluster.traces import SpotTrace, load_trace
 from repro.configs import get_config
 from repro.core.autoscaler import Autoscaler, ConstantTarget, LoadAutoscaler
-from repro.core.policy import Policy, make_policy
+from repro.core.policy import Policy, make_policy, policy_class
 from repro.models.config import ModelConfig
 from repro.serving.latency import make_latency_model
 from repro.serving.load_balancer import (
@@ -69,12 +69,18 @@ def resolve_zones(
 def _build_policy(spec: ServiceSpec, trace: SpotTrace,
                   catalog: Catalog) -> Policy:
     name = spec.replica_policy.name
+    kwargs = spec.replica_policy.policy_kwargs()
+    # the forecast: section only applies to forecast-consuming policies
+    # (uses_forecast flag); vanilla cells of a mixed sweep ignore it
+    if spec.forecast is not None and getattr(
+        policy_class(name), "uses_forecast", False
+    ):
+        kwargs.update(spec.forecast.policy_kwargs())
     try:
-        policy = make_policy(name, **spec.replica_policy.policy_kwargs())
-    except TypeError as e:
+        policy = make_policy(name, **kwargs)
+    except (TypeError, ValueError) as e:
         raise SpecError(
-            f"replica_policy {name!r} rejected its knobs "
-            f"{spec.replica_policy.policy_kwargs()}: {e}"
+            f"replica_policy {name!r} rejected its knobs {kwargs}: {e}"
         ) from e
     if name == "omniscient":
         # the oracle needs the full trace ahead of time (offline ILP)

@@ -17,6 +17,7 @@ from typing import Any, Mapping, Optional
 
 from repro.service.spec import (
     AutoscalerSpec,
+    ForecastSpec,
     LatencySpec,
     PlacementFilter,
     ReplicaPolicySpec,
@@ -130,8 +131,11 @@ def _sweep_workload(entry: Any) -> WorkloadSpec:
 
 
 def _sweep_from_dict(d: Mapping[str, Any]) -> SweepSpec:
-    _check_keys(d, ("policies", "traces", "workloads", "seeds"), "sweep")
-    for key in ("policies", "traces", "workloads", "seeds"):
+    _check_keys(
+        d, ("policies", "traces", "workloads", "seeds", "forecasters"),
+        "sweep",
+    )
+    for key in ("policies", "traces", "workloads", "seeds", "forecasters"):
         if key in d and not isinstance(d[key], (list, tuple)):
             raise SpecError(
                 f"sweep.{key} must be a list, got {type(d[key]).__name__}"
@@ -142,11 +146,18 @@ def _sweep_from_dict(d: Mapping[str, Any]) -> SweepSpec:
             raise SpecError(
                 f"sweep.traces entries must be strings, got {tr!r}"
             )
+    forecasters = tuple(d.get("forecasters", ()))
+    for fc in forecasters:
+        if not isinstance(fc, str):
+            raise SpecError(
+                f"sweep.forecasters entries must be strings, got {fc!r}"
+            )
     return SweepSpec(
         policies=tuple(_sweep_policy(e) for e in d.get("policies", ())),
         traces=traces,
         workloads=tuple(_sweep_workload(e) for e in d.get("workloads", ())),
         seeds=tuple(d.get("seeds", ())),
+        forecasters=forecasters,
     )
 
 
@@ -161,8 +172,8 @@ def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
     _check_keys(
         d,
         ("name", "model", "trace", "resources", "replica_policy",
-         "autoscaler", "workload", "latency", "sim", "load_balancer",
-         "sweep"),
+         "autoscaler", "workload", "latency", "forecast", "sim",
+         "load_balancer", "sweep"),
         "service spec",
     )
     try:
@@ -184,6 +195,10 @@ def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
         kw["latency"] = LatencySpec(
             **_pick(_section(d, "latency"), LatencySpec, "latency")
         )
+        if d.get("forecast") is not None:
+            kw["forecast"] = ForecastSpec(
+                **_pick(_section(d, "forecast"), ForecastSpec, "forecast")
+            )
         kw["sim"] = SimSpec(**_pick(_section(d, "sim"), SimSpec, "sim"))
         if d.get("sweep") is not None:
             kw["sweep"] = _sweep_from_dict(_section(d, "sweep"))

@@ -45,6 +45,7 @@ __all__ = [
     "AutoscalerSpec",
     "WorkloadSpec",
     "LatencySpec",
+    "ForecastSpec",
     "SimSpec",
     "SweepSpec",
     "ServiceSpec",
@@ -346,6 +347,75 @@ class LatencySpec:
 
 
 # ---------------------------------------------------------------------------
+# Forecasting (spot-availability predictors, repro.forecast)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ForecastSpec:
+    """Which spot-availability forecaster a risk-aware policy consults.
+
+    The section configures forecast-consuming policies (those declaring
+    ``uses_forecast``, e.g. ``risk_spothedge``); other policies ignore it,
+    so a sweep can mix risk-aware and vanilla cells under one spec.
+
+    ``name`` picks the estimator (``persistence`` / ``ewma`` /
+    ``markov``); ``horizon_s`` is the look-ahead the policy prices risk
+    over; ``risk_threshold`` / ``calm_threshold`` bound the surge and
+    trim regimes of :class:`repro.core.risk_aware.RiskAwareSpotHedgePolicy`;
+    ``args`` passes further keywords verbatim to the forecaster
+    constructor (e.g. ``smoothing`` for ``markov``).
+    """
+
+    name: str = "markov"
+    horizon_s: Optional[float] = None
+    risk_threshold: Optional[float] = None
+    calm_threshold: Optional[float] = None
+    args: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        _require(bool(self.name), "forecast.name must be set")
+        if self.horizon_s is not None:
+            _require(
+                self.horizon_s > 0,
+                f"forecast.horizon_s must be positive, got {self.horizon_s}",
+            )
+        for field in ("risk_threshold", "calm_threshold"):
+            v = getattr(self, field)
+            if v is not None:
+                _require(
+                    0.0 <= v <= 1.0,
+                    f"forecast.{field} must be a probability, got {v}",
+                )
+
+    def policy_kwargs(self) -> Dict[str, Any]:
+        """Constructor kwargs for a forecast-consuming policy."""
+        kw: Dict[str, Any] = {"forecaster": self.name}
+        if self.args:
+            kw["forecaster_args"] = dict(self.args)
+        if self.horizon_s is not None:
+            kw["horizon_s"] = self.horizon_s
+        if self.risk_threshold is not None:
+            kw["risk_threshold"] = self.risk_threshold
+        if self.calm_threshold is not None:
+            kw["calm_threshold"] = self.calm_threshold
+        return kw
+
+    def to_dict(self) -> Dict[str, Any]:
+        out = _clean(
+            {
+                "name": self.name,
+                "horizon_s": self.horizon_s,
+                "risk_threshold": self.risk_threshold,
+                "calm_threshold": self.calm_threshold,
+            }
+        )
+        if self.args:
+            out["args"] = dict(self.args)
+        return out
+
+
+# ---------------------------------------------------------------------------
 # Simulation horizon / fabric knobs
 # ---------------------------------------------------------------------------
 
@@ -431,24 +501,29 @@ class SimSpec:
 
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
-    """A scenario grid: ``policies × traces × workloads × seeds``.
+    """A scenario grid: ``policies × traces × workloads × seeds``
+    (× ``forecasters`` when that axis is set).
 
     Every axis left empty falls back to the base spec's single value, so a
     spec with ``sweep: {}`` expands to exactly one scenario.  Seeds
     override ``workload.seed`` per cell — the standard way to get
-    replicated measurements of one configuration.
+    replicated measurements of one configuration.  Forecaster entries
+    override ``forecast.name`` per cell (vanilla policies in the same
+    grid ignore the section, so predictor × policy backtests compose).
 
         sweep:
-          policies: [spothedge, even_spread, ondemand_only]
+          policies: [spothedge, risk_spothedge, ondemand_only]
           traces: [aws-1, gcp-1]
           workloads: [poisson, arena]
           seeds: [0, 1, 2]
+          forecasters: [persistence, markov]
     """
 
     policies: Tuple[ReplicaPolicySpec, ...] = ()
     traces: Tuple[str, ...] = ()
     workloads: Tuple["WorkloadSpec", ...] = ()
     seeds: Tuple[int, ...] = ()
+    forecasters: Tuple[str, ...] = ()
 
     def __post_init__(self) -> None:
         for tr in self.traces:
@@ -460,6 +535,11 @@ class SweepSpec:
                 isinstance(s, int) and not isinstance(s, bool),
                 f"sweep.seeds entries must be ints, got {s!r}",
             )
+        for fc in self.forecasters:
+            _require(
+                bool(fc),
+                "sweep.forecasters entries must be non-empty strings",
+            )
 
     @property
     def size(self) -> int:
@@ -469,6 +549,7 @@ class SweepSpec:
             * max(len(self.traces), 1)
             * max(len(self.workloads), 1)
             * max(len(self.seeds), 1)
+            * max(len(self.forecasters), 1)
         )
 
     def to_dict(self) -> Dict[str, Any]:
@@ -481,6 +562,8 @@ class SweepSpec:
             out["workloads"] = [w.to_dict() for w in self.workloads]
         if self.seeds:
             out["seeds"] = list(self.seeds)
+        if self.forecasters:
+            out["forecasters"] = list(self.forecasters)
         return out
 
 
@@ -508,6 +591,7 @@ class ServiceSpec:
     )
     workload: WorkloadSpec = dataclasses.field(default_factory=WorkloadSpec)
     latency: LatencySpec = dataclasses.field(default_factory=LatencySpec)
+    forecast: Optional[ForecastSpec] = None
     sim: SimSpec = dataclasses.field(default_factory=SimSpec)
     load_balancer: str = "least_loaded"
     sweep: Optional[SweepSpec] = None
@@ -530,6 +614,7 @@ class ServiceSpec:
         from repro.cluster.traces import TraceLibrary
         from repro.configs import ARCH_IDS
         from repro.core.policy import registered_policies
+        from repro.forecast.base import registered_forecasters
 
         policies = registered_policies()
         _require(
@@ -537,12 +622,25 @@ class ServiceSpec:
             f"unknown replica_policy.name {self.replica_policy.name!r}; "
             f"registered policies: {policies}",
         )
+        forecasters = registered_forecasters()
+        if self.forecast is not None:
+            _require(
+                self.forecast.name in forecasters,
+                f"unknown forecast.name {self.forecast.name!r}; "
+                f"registered forecasters: {forecasters}",
+            )
         if self.sweep is not None:
             for p in self.sweep.policies:
                 _require(
                     p.name in policies,
                     f"unknown sweep policy {p.name!r}; "
                     f"registered policies: {policies}",
+                )
+            for fc in self.sweep.forecasters:
+                _require(
+                    fc in forecasters,
+                    f"unknown sweep forecaster {fc!r}; "
+                    f"registered forecasters: {forecasters}",
                 )
             names = TraceLibrary().names()
             for tr in self.sweep.traces:
@@ -588,6 +686,8 @@ class ServiceSpec:
             "sim": self.sim.to_dict(),
             "load_balancer": self.load_balancer,
         }
+        if self.forecast is not None:
+            out["forecast"] = self.forecast.to_dict()
         if self.sweep is not None:
             out["sweep"] = self.sweep.to_dict()
         return out

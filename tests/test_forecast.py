@@ -1,0 +1,709 @@
+"""Tests for the spot-availability forecasting subsystem.
+
+Covers the Forecaster contract (probabilities, registry), the degenerate
+monotonicity properties from the issue (all-available traces drive
+``p_available`` up, all-preempting traces drive it down), the regional
+Markov estimator's sibling-correlation mechanics, the backtest harness
+and its versioned artifact, the ``forecast:`` spec plumbing through
+loader/builder/suite, and RiskAwareSpotHedgePolicy behaviour.
+"""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.cluster.traces import (
+    SpotTrace,
+    infer_region,
+    load_trace,
+    trace_stats,
+)
+from repro.core.policy import ControllerEvent, EventKind, make_policy
+from repro.forecast import (
+    BacktestReport,
+    Forecaster,
+    MarkovRegionalForecaster,
+    ZoneForecast,
+    make_forecaster,
+    registered_forecasters,
+    run_backtest,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - environment-dependent
+    HAVE_HYPOTHESIS = False
+
+
+ZONES = ["us-west-2a", "us-west-2b", "us-west-2c"]
+REGIONS = {z: "us-west-2" for z in ZONES}
+ALL_FORECASTERS = ("persistence", "ewma", "markov")
+
+
+def _fresh(name: str, dt: float = 60.0) -> Forecaster:
+    fc = make_forecaster(name)
+    fc.reset(ZONES, REGIONS, dt=dt)
+    return fc
+
+
+def _feed_constant(fc: Forecaster, up: bool, steps: int,
+                   dt: float = 60.0) -> None:
+    for t in range(steps):
+        fc.observe(t * dt, {z: up for z in ZONES})
+
+
+# ---------------------------------------------------------------------------
+# registry + interface contract
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_the_three_builtins():
+    names = registered_forecasters()
+    for expected in ALL_FORECASTERS:
+        assert expected in names
+
+
+def test_unknown_forecaster_raises():
+    with pytest.raises(KeyError, match="unknown forecaster"):
+        make_forecaster("nope")
+
+
+@pytest.mark.parametrize("name", ("persistence", "ewma"))
+def test_forecaster_priors_validated_as_probabilities(name):
+    with pytest.raises(ValueError, match="probability"):
+        make_forecaster(name, prior=5.0)
+
+
+def test_zone_forecast_rejects_non_probabilities():
+    with pytest.raises(ValueError, match="probability"):
+        ZoneForecast(zone="z", p_available=1.2, p_preempt=0.0)
+    with pytest.raises(ValueError, match="probability"):
+        ZoneForecast(zone="z", p_available=0.5, p_preempt=-0.1)
+
+
+@pytest.mark.parametrize("name", ALL_FORECASTERS)
+def test_predict_requires_positive_horizon(name):
+    fc = _fresh(name)
+    with pytest.raises(ValueError, match="horizon_s"):
+        fc.predict(0.0, 0.0)
+
+
+@pytest.mark.parametrize("name", ALL_FORECASTERS)
+def test_unobserved_zones_still_get_valid_scores(name):
+    fc = _fresh(name)
+    out = fc.predict(0.0, 600.0)
+    assert set(out) == set(ZONES)
+    for f in out.values():
+        assert 0.0 <= f.p_available <= 1.0
+        assert 0.0 <= f.p_preempt <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# degenerate-trace monotonicity (the issue's property requirements)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ALL_FORECASTERS)
+def test_all_available_history_predicts_high_availability(name):
+    fc = _fresh(name)
+    _feed_constant(fc, up=True, steps=200)
+    for f in fc.predict(200 * 60.0, 600.0).values():
+        assert f.p_available >= 0.9
+        assert f.p_preempt <= 0.25
+
+
+@pytest.mark.parametrize("name", ALL_FORECASTERS)
+def test_all_preempting_history_predicts_low_availability(name):
+    fc = _fresh(name)
+    _feed_constant(fc, up=False, steps=200)
+    for f in fc.predict(200 * 60.0, 600.0).values():
+        assert f.p_available <= 0.1
+        assert f.p_preempt >= 0.9
+
+
+@pytest.mark.parametrize("name", ALL_FORECASTERS)
+def test_degenerate_histories_order_the_forecasts(name):
+    """An all-up zone must always score above an all-down zone."""
+    fc = _fresh(name)
+    for t in range(100):
+        fc.observe(
+            t * 60.0,
+            {ZONES[0]: True, ZONES[1]: False, ZONES[2]: True},
+        )
+    out = fc.predict(100 * 60.0, 900.0)
+    assert out[ZONES[0]].p_available > out[ZONES[1]].p_available
+    assert out[ZONES[0]].p_preempt < out[ZONES[1]].p_preempt
+
+
+def test_event_channel_maps_transitions_to_observations():
+    fc = _fresh("persistence")
+    fc.observe_event(ControllerEvent(
+        kind=EventKind.READY, zone=ZONES[0], now=0.0, instance_id=1
+    ))
+    fc.observe_event(ControllerEvent(
+        kind=EventKind.PREEMPTION, zone=ZONES[1], now=0.0, instance_id=2
+    ))
+    fc.observe_event(ControllerEvent(
+        kind=EventKind.LAUNCH_FAILURE, zone=ZONES[2], now=0.0
+    ))
+    out = fc.predict(60.0, 60.0)
+    assert out[ZONES[0]].p_available == 1.0
+    assert out[ZONES[1]].p_available == 0.0
+    assert out[ZONES[2]].p_available == 0.0
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: probability validity over arbitrary observation streams
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        name=st.sampled_from(ALL_FORECASTERS),
+        pattern=st.lists(
+            st.tuples(st.integers(0, 2), st.booleans()),
+            min_size=0, max_size=60,
+        ),
+        horizon_steps=st.integers(1, 120),
+    )
+    def test_scores_are_valid_probabilities(name, pattern, horizon_steps):
+        """Any observation stream, any horizon: scores stay in [0, 1]."""
+        fc = make_forecaster(name)
+        fc.reset(ZONES, REGIONS, dt=60.0)
+        for t, (zi, up) in enumerate(pattern):
+            fc.observe(t * 60.0, {ZONES[zi]: up})
+        out = fc.predict(len(pattern) * 60.0, horizon_steps * 60.0)
+        for f in out.values():
+            assert 0.0 <= f.p_available <= 1.0
+            assert 0.0 <= f.p_preempt <= 1.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        name=st.sampled_from(ALL_FORECASTERS),
+        up=st.booleans(),
+        steps=st.integers(30, 300),
+    )
+    def test_degenerate_monotonicity_property(name, up, steps):
+        """All-available history -> p_available >= 0.9; all-preempting
+        history -> p_available <= 0.1, for every estimator and length."""
+        fc = make_forecaster(name)
+        fc.reset(ZONES, REGIONS, dt=60.0)
+        _feed_constant(fc, up=up, steps=steps)
+        for f in fc.predict(steps * 60.0, 300.0).values():
+            if up:
+                assert f.p_available >= 0.9
+            else:
+                assert f.p_available <= 0.1
+
+
+# ---------------------------------------------------------------------------
+# regional Markov: sibling correlation is actually exploited
+# ---------------------------------------------------------------------------
+
+
+def test_markov_learns_higher_hazard_under_sibling_crunch():
+    """Feed a correlated history (sibling down precedes own drop) and
+    check the crunch bucket's up->down rate exceeds the calm bucket's."""
+    fc = MarkovRegionalForecaster(smoothing=1.0)
+    fc.reset(ZONES, REGIONS, dt=60.0)
+    rng = np.random.default_rng(7)
+    state = {z: True for z in ZONES}
+    for t in range(3000):
+        # region-level crunch process: 10% of time in crunch
+        crunch = (t % 100) >= 90
+        for i, z in enumerate(ZONES):
+            if crunch:
+                # zones fall one step after the first sibling (lagged)
+                state[z] = False if (t % 100) >= 90 + i else state[z]
+            else:
+                state[z] = True
+        fc.observe(t * 60.0, dict(state))
+    p_calm, _ = fc.rates(ZONES[1])["calm"]
+    p_crunch, _ = fc.rates(ZONES[1])["crunch"]
+    assert p_crunch > p_calm
+
+
+def test_markov_sibling_state_raises_risk_now():
+    """Same own-history, sibling down vs. up: risk must be higher (and
+    availability lower) when the sibling is in crunch.
+
+    The probed zone is a *late faller* (its drops trail its siblings'),
+    so its up->down transitions land in the crunch bucket — the
+    predictive half of the Fig. 3 correlation.  The first domino of a
+    crunch is unpredictable by construction.
+    """
+    def build(sib_up: bool):
+        fc = MarkovRegionalForecaster()
+        fc.reset(ZONES, REGIONS, dt=60.0)
+        state = {z: True for z in ZONES}
+        # history with real crunches so the buckets separate; zone i
+        # falls at crunch onset + i (ZONES[2] always falls last)
+        for t in range(2000):
+            crunch = (t % 200) >= 180
+            for i, z in enumerate(ZONES):
+                state[z] = not crunch or (t % 200) < 180 + i
+            fc.observe(t * 60.0, dict(state))
+        now = 2000 * 60.0
+        fc.observe(now, {ZONES[0]: sib_up, ZONES[1]: sib_up,
+                         ZONES[2]: True})
+        return fc.predict(now, 900.0)[ZONES[2]]
+
+    calm = build(sib_up=True)
+    crunch = build(sib_up=False)
+    assert crunch.p_preempt > calm.p_preempt
+    assert crunch.p_available < calm.p_available
+
+
+def test_infer_region_heuristics():
+    assert infer_region("us-west-2a") == "us-west-2"
+    assert infer_region("us-central1-a") == "us-central1"
+    assert infer_region("weird") == "weird"
+
+
+# ---------------------------------------------------------------------------
+# backtest harness + artifact
+# ---------------------------------------------------------------------------
+
+
+def _tiny_trace(seed: int = 3) -> SpotTrace:
+    rng = np.random.default_rng(seed)
+    T = 400
+    cap = np.zeros((T, len(ZONES)), dtype=np.int32)
+    up = np.ones(len(ZONES), dtype=bool)
+    for t in range(T):
+        flip = rng.random(len(ZONES)) < 0.05
+        up = np.where(flip, ~up, up)
+        cap[t] = np.where(up, 4, 0)
+    return SpotTrace(zones=tuple(ZONES), cap=cap, dt=60.0, name="tiny")
+
+
+@pytest.mark.parametrize("name", ALL_FORECASTERS)
+def test_backtest_scores_are_finite_and_bounded(name):
+    report = run_backtest(
+        _tiny_trace(), name, horizons=(1, 5), warmup_steps=50
+    )
+    assert report.trace == "tiny"
+    assert report.forecaster == name
+    for h in report.horizons:
+        assert 0.0 <= h.brier_avail <= 1.0
+        assert 0.0 <= h.brier_preempt <= 1.0
+        assert 0.0 <= h.hit_rate <= 1.0
+        assert h.n > 0
+        for bin_ in h.calibration:
+            assert 0.0 <= bin_["p_mean"] <= 1.0
+            assert 0.0 <= bin_["freq"] <= 1.0
+
+
+def test_backtest_artifact_roundtrip(tmp_path):
+    report = run_backtest(
+        _tiny_trace(), "markov", horizons=(1, 5), warmup_steps=50
+    )
+    path = report.save(str(tmp_path))
+    with open(path) as f:
+        d = json.load(f)
+    assert d["schema"] == 1
+    assert d["kind"] == "forecast-backtest"
+    assert d["mean_brier_avail"] == pytest.approx(
+        report.mean_brier_avail, abs=1e-6
+    )
+    again = BacktestReport.load(path)
+    assert again.trace == report.trace
+    assert len(again.horizons) == len(report.horizons)
+
+
+def test_backtest_rejects_bad_schema(tmp_path):
+    path = os.path.join(str(tmp_path), "bad.json")
+    with open(path, "w") as f:
+        json.dump({"schema": 99}, f)
+    with pytest.raises(ValueError, match="schema"):
+        BacktestReport.load(path)
+
+
+def test_backtest_perfect_forecaster_on_constant_trace():
+    """On an always-available trace every estimator converges to Brier ~0
+    and the persistence baseline is exactly 0."""
+    cap = np.full((300, len(ZONES)), 2, dtype=np.int32)
+    tr = SpotTrace(zones=tuple(ZONES), cap=cap, dt=60.0, name="const")
+    for name in ALL_FORECASTERS:
+        report = run_backtest(tr, name, horizons=(5,), warmup_steps=100)
+        assert report.horizons[0].brier_avail <= 0.01
+    persist = run_backtest(tr, "persistence", horizons=(5,),
+                           warmup_steps=100)
+    assert persist.horizons[0].brier_avail == 0.0
+
+
+def test_committed_backtest_artifacts_prove_markov_beats_persistence():
+    """The acceptance artifact: committed backtests must show the Markov
+    forecaster strictly beating persistence (Brier) on >= 2 named traces."""
+    art = os.path.join(os.path.dirname(__file__), "..",
+                       "artifacts", "forecast")
+    wins = 0
+    for tname in ("aws-1", "aws-2", "aws-3", "gcp-1"):
+        mk = os.path.join(art, f"backtest_{tname}_markov.json")
+        ps = os.path.join(art, f"backtest_{tname}_persistence.json")
+        if not (os.path.exists(mk) and os.path.exists(ps)):
+            continue
+        if (BacktestReport.load(mk).mean_brier_avail
+                < BacktestReport.load(ps).mean_brier_avail):
+            wins += 1
+    assert wins >= 2
+
+
+# ---------------------------------------------------------------------------
+# trace stats helper (satellite: the quantities forecasters consume)
+# ---------------------------------------------------------------------------
+
+
+def test_trace_stats_structure_and_ranges():
+    stats = trace_stats(load_trace("aws-1"))
+    assert stats["name"] == "aws-1"
+    assert set(stats["zones"]) == set(load_trace("aws-1").zones)
+    for s in stats["zones"].values():
+        assert 0.0 <= s["availability"] <= 1.0
+        assert s["preemptions_per_day"] >= 0.0
+        assert -1.0 <= s["mean_sibling_corr"] <= 1.0
+        assert s["region"] == "us-west-2"
+    assert 0.0 <= stats["mean_availability"] <= 1.0
+
+
+def test_traces_cli_prints_stats(capsys):
+    from repro.cluster.traces import main
+
+    assert main(["aws-1"]) == 0
+    out = capsys.readouterr().out
+    assert "aws-1" in out and "us-west-2a" in out
+
+
+def test_traces_cli_json_mode(capsys):
+    from repro.cluster.traces import main
+
+    assert main(["aws-1", "--json"]) == 0
+    data = json.loads(capsys.readouterr().out)
+    assert data[0]["name"] == "aws-1"
+
+
+# ---------------------------------------------------------------------------
+# spec / builder / suite plumbing
+# ---------------------------------------------------------------------------
+
+
+def _spec_dict(policy: str = "risk_spothedge", **forecast):
+    d = {
+        "name": "fc-test",
+        "model": "llama3.2-1b",
+        "trace": "aws-1",
+        "replica_policy": {"name": policy},
+        "workload": {"kind": "none"},
+        "sim": {"duration_hours": 1.0},
+    }
+    if forecast:
+        d["forecast"] = forecast
+    return d
+
+
+def test_forecast_section_reaches_the_policy():
+    from repro.service import spec_from_dict
+    from repro.service.builder import build_service
+
+    spec = spec_from_dict(_spec_dict(
+        name="ewma", horizon_s=300.0, risk_threshold=0.7,
+        calm_threshold=0.05, args={"halflife_s": 1200.0},
+    ))
+    policy = build_service(spec).policy
+    assert policy.forecaster.name == "ewma"
+    assert policy.forecaster.halflife_s == 1200.0
+    assert policy.horizon_s == 300.0
+    assert policy.risk_threshold == 0.7
+    assert policy.calm_threshold == 0.05
+
+
+def test_forecast_section_ignored_by_vanilla_policies():
+    from repro.core.spothedge import SpotHedgePolicy
+    from repro.service import spec_from_dict
+    from repro.service.builder import build_service
+
+    spec = spec_from_dict(_spec_dict(policy="spothedge", name="markov"))
+    policy = build_service(spec).policy
+    assert type(policy) is SpotHedgePolicy
+
+
+def test_forecast_section_validation():
+    from repro.service import SpecError, spec_from_dict
+
+    with pytest.raises(SpecError, match="forecast.name"):
+        spec_from_dict(_spec_dict(name="definitely-not-registered"))
+    with pytest.raises(SpecError, match="horizon_s"):
+        spec_from_dict(_spec_dict(name="markov", horizon_s=-5.0))
+    with pytest.raises(SpecError, match="risk_threshold"):
+        spec_from_dict(_spec_dict(name="markov", risk_threshold=1.5))
+
+
+def test_forecast_spec_roundtrips():
+    from repro.service import spec_from_dict
+
+    spec = spec_from_dict(_spec_dict(name="markov", horizon_s=450.0))
+    again = spec_from_dict(spec.to_dict())
+    assert again == spec
+
+
+def test_sweep_forecaster_axis_expands_and_labels():
+    from repro.experiments import ScenarioSuite
+    from repro.service import spec_from_dict
+
+    d = _spec_dict()
+    d["sweep"] = {
+        "policies": ["spothedge", "risk_spothedge"],
+        "forecasters": ["persistence", "markov"],
+    }
+    suite = ScenarioSuite.from_spec(spec_from_dict(d))
+    # spothedge ignores the forecast section, so its cells collapse to
+    # one per (trace, workload, seed) — no duplicate identical runs
+    assert len(suite) == 3
+    risk = [sc for sc in suite.scenarios
+            if sc.labels["policy"] == "risk_spothedge"]
+    vanilla = [sc for sc in suite.scenarios
+               if sc.labels["policy"] == "spothedge"]
+    assert len(risk) == 2 and len(vanilla) == 1
+    assert {sc.labels["forecaster"] for sc in risk} == {
+        "persistence", "markov"
+    }
+    for sc in risk:
+        assert sc.spec.forecast is not None
+        assert sc.spec.forecast.name == sc.labels["forecaster"]
+    assert "forecaster" not in vanilla[0].labels
+
+
+def test_sweep_unknown_forecaster_rejected():
+    from repro.service import SpecError, spec_from_dict
+
+    d = _spec_dict()
+    d["sweep"] = {"forecasters": ["nope"]}
+    with pytest.raises(SpecError, match="sweep forecaster"):
+        spec_from_dict(d)
+
+
+# ---------------------------------------------------------------------------
+# RiskAwareSpotHedgePolicy behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_risk_policy_registered_and_constructible():
+    policy = make_policy("risk_spothedge")
+    assert policy.name == "risk_spothedge"
+    assert policy.uses_forecast
+    assert policy.forecaster.name == "markov"
+
+
+def test_risk_policy_accepts_zero_overprovision():
+    """overprovision: 0 is a legal vanilla knob; the trim floor must
+    clamp to it rather than failing its own validation."""
+    policy = make_policy("risk_spothedge", num_overprovision=0)
+    assert policy.min_overprovision == 0
+
+    from repro.service import spec_from_dict
+    from repro.service.builder import build_service
+
+    d = _spec_dict(name="markov")
+    d["replica_policy"]["overprovision"] = 0
+    assert build_service(spec_from_dict(d)).policy.min_overprovision == 0
+
+
+def test_builder_wraps_policy_value_errors_as_spec_errors():
+    from repro.service import SpecError, spec_from_dict
+    from repro.service.builder import build_service
+
+    d = _spec_dict(name="markov")
+    d["replica_policy"]["args"] = {"obs_interval_s": -1.0}
+    with pytest.raises(SpecError, match="rejected its knobs"):
+        build_service(spec_from_dict(d))
+
+
+def test_risk_policy_rejects_bad_knobs():
+    with pytest.raises(ValueError, match="horizon_s"):
+        make_policy("risk_spothedge", horizon_s=0)
+    with pytest.raises(ValueError, match="risk_threshold"):
+        make_policy("risk_spothedge", risk_threshold=2.0)
+    with pytest.raises(ValueError, match="min_overprovision"):
+        make_policy("risk_spothedge", min_overprovision=5)
+    with pytest.raises(ValueError, match="forecaster_args"):
+        from repro.forecast import PersistenceForecaster
+
+        make_policy(
+            "risk_spothedge",
+            forecaster=PersistenceForecaster(),
+            forecaster_args={"prior": 0.4},
+        )
+
+
+def test_risk_policy_runs_and_differs_from_vanilla():
+    """End to end on gcp-1: the risk-aware run must be valid and must
+    actually diverge from vanilla (the forecaster is in the loop)."""
+    from repro.cluster.simulator import run_policy_on_trace
+
+    tr = load_trace("gcp-1")
+    base = run_policy_on_trace("spothedge", tr, n_target=4,
+                               duration_s=36 * 3600.0)
+    risk = run_policy_on_trace("risk_spothedge", tr, n_target=4,
+                               duration_s=36 * 3600.0)
+    assert 0.0 <= risk.availability <= 1.0
+    assert risk.total_cost > 0
+    assert (
+        risk.total_cost != base.total_cost
+        or risk.n_preemptions != base.n_preemptions
+    )
+
+
+def test_risk_policy_surges_buffer_under_predicted_risk():
+    """Force a high-risk forecast and check the spot goal surges; force
+    calm and check it trims."""
+    from repro.cluster.catalog import default_catalog
+    from repro.core.policy import Observation
+
+    catalog = default_catalog()
+    policy = make_policy("risk_spothedge", num_overprovision=2,
+                         surge_overprovision=2, min_overprovision=1)
+    zones = [catalog.zone(z) for z in ZONES]
+    policy.reset(zones, catalog, "p3.2xlarge")
+
+    class _Inst:
+        def __init__(self, zone):
+            self.zone = zone
+            self.launched_at = 0.0
+            self.id = 1
+
+    obs = Observation(
+        now=0.0, n_target=4,
+        spot_ready=[_Inst(ZONES[0])], spot_provisioning=[],
+        od_ready=[], od_provisioning=[],
+    )
+    policy._forecast = {
+        z: ZoneForecast(zone=z, p_available=0.2, p_preempt=0.9)
+        for z in ZONES
+    }
+    assert policy._spot_goal(obs) == 4 + 2 + 2          # surge
+    policy._forecast = {
+        z: ZoneForecast(zone=z, p_available=0.99, p_preempt=0.01)
+        for z in ZONES
+    }
+    assert policy._spot_goal(obs) == 4 + 1              # calm trim
+    policy._forecast = {
+        z: ZoneForecast(zone=z, p_available=0.9, p_preempt=0.3)
+        for z in ZONES
+    }
+    assert policy._spot_goal(obs) == 4 + 2              # base
+
+
+def test_surge_is_spot_only_insurance():
+    """A surged spot goal must not leak into the on-demand fallback: a
+    healthy fleet under surge launches spot, never on-demand."""
+    from repro.cluster.catalog import default_catalog
+    from repro.core.policy import LaunchOnDemand, LaunchSpot, Observation
+
+    catalog = default_catalog()
+    policy = make_policy("risk_spothedge", num_overprovision=2,
+                         surge_overprovision=1)
+    policy.reset([catalog.zone(z) for z in ZONES], catalog, "p3.2xlarge")
+
+    class _Inst:
+        def __init__(self, zone, iid):
+            self.zone = zone
+            self.launched_at = 0.0
+            self.id = iid
+
+    # full healthy fleet (6 ready >= n_tar + n_extra), one risky zone
+    ready = [_Inst(ZONES[k % 3], k) for k in range(6)]
+    obs = Observation(now=0.0, n_target=4, spot_ready=ready,
+                      spot_provisioning=[], od_ready=[],
+                      od_provisioning=[])
+    policy._feed_forecaster(obs)
+    policy._forecast = {
+        ZONES[0]: ZoneForecast(zone=ZONES[0], p_available=0.2,
+                               p_preempt=0.9),
+        ZONES[1]: ZoneForecast(zone=ZONES[1], p_available=0.99,
+                               p_preempt=0.01),
+        ZONES[2]: ZoneForecast(zone=ZONES[2], p_available=0.99,
+                               p_preempt=0.01),
+    }
+    actions = super(type(policy), policy).decide(obs)
+    spot = [a for a in actions if isinstance(a, LaunchSpot)]
+    od = [a for a in actions if isinstance(a, LaunchOnDemand)]
+    assert len(spot) == 1          # the surge replica
+    assert od == []                # ...and no on-demand leak
+    # the surge replica avoids the predicted-collapse zone
+    assert spot[0].zone != ZONES[0]
+
+
+def test_surge_launch_avoids_predicted_collapse_zone():
+    """Even when the risky zone has the fewest replicas (count-first
+    ordering would pick it), the surge lands in a forecast-safe zone."""
+    policy = make_policy("risk_spothedge")
+    from repro.cluster.catalog import default_catalog
+
+    catalog = default_catalog()
+    policy.reset([catalog.zone(z) for z in ZONES], catalog, "p3.2xlarge")
+    policy._forecast = {
+        ZONES[0]: ZoneForecast(zone=ZONES[0], p_available=0.2,
+                               p_preempt=0.9),
+        ZONES[1]: ZoneForecast(zone=ZONES[1], p_available=0.99,
+                               p_preempt=0.01),
+        ZONES[2]: ZoneForecast(zone=ZONES[2], p_available=0.99,
+                               p_preempt=0.01),
+    }
+    # the risky zone is least loaded — vanilla ordering would pick it
+    counts = {ZONES[0]: 1, ZONES[1]: 2, ZONES[2]: 3}
+    assert policy._select_next_zone(counts, 0.0) == ZONES[1]
+    # ...unless every zone is predicted to collapse (no safe harbor)
+    policy._forecast = {
+        z: ZoneForecast(zone=z, p_available=0.2, p_preempt=0.9)
+        for z in ZONES
+    }
+    assert policy._select_next_zone(counts, 0.0) == ZONES[0]
+
+
+def test_risk_policy_hedges_only_on_predicted_collapse():
+    """The forecast discount only fires when predicted survivors < N_Tar
+    (losses the spot buffer can absorb are not hedged)."""
+    from repro.cluster.catalog import default_catalog
+    from repro.core.policy import Observation
+
+    catalog = default_catalog()
+    policy = make_policy("risk_spothedge", num_overprovision=2)
+    zones = [catalog.zone(z) for z in ZONES]
+    policy.reset(zones, catalog, "p3.2xlarge")
+
+    class _Inst:
+        def __init__(self, zone, iid):
+            self.zone = zone
+            self.launched_at = 0.0
+            self.id = iid
+
+    risky = {
+        z: ZoneForecast(zone=z, p_available=0.3, p_preempt=0.95)
+        for z in ZONES[:2]
+    }
+    safe = {
+        ZONES[2]: ZoneForecast(
+            zone=ZONES[2], p_available=0.99, p_preempt=0.01
+        )
+    }
+    policy._forecast = {**risky, **safe}
+    # 6 ready, 2 in risky zones: survivors 4 >= target 4 -> no hedge
+    ready = [_Inst(ZONES[0], 1), _Inst(ZONES[1], 2)] + [
+        _Inst(ZONES[2], 3 + k) for k in range(4)
+    ]
+    obs = Observation(now=0.0, n_target=4, spot_ready=ready,
+                      spot_provisioning=[], od_ready=[],
+                      od_provisioning=[])
+    assert policy._at_risk_ready(obs) == 0
+    # 4 ready, 2 in risky zones: survivors 2 < target 4 -> hedge fires
+    ready = [_Inst(ZONES[0], 1), _Inst(ZONES[1], 2),
+             _Inst(ZONES[2], 3), _Inst(ZONES[2], 4)]
+    obs = Observation(now=0.0, n_target=4, spot_ready=ready,
+                      spot_provisioning=[], od_ready=[],
+                      od_provisioning=[])
+    assert policy._at_risk_ready(obs) == 2
