@@ -22,6 +22,7 @@ from benchmarks import (
     latency,
     roofline,
     sensitivity,
+    token_engine,
 )
 
 MODULES = {
@@ -34,6 +35,7 @@ MODULES = {
     "engine_bench": engine_bench,    # Fig. 6
     "engine_speedup": engine_speedup,  # legacy vs vector matrix timing
     "roofline": roofline,            # deliverable (g)
+    "token_engine": token_engine,    # request- vs token-level replicas
 }
 
 

@@ -45,6 +45,10 @@ __all__ = ["CellResult", "ScenarioReport", "SCHEMA_VERSION"]
 SCHEMA_VERSION = 1
 
 
+def _finite(v: float) -> Optional[float]:
+    return float(v) if np.isfinite(v) else None
+
+
 @dataclasses.dataclass
 class CellResult:
     """One scenario's labels + headline metrics."""
@@ -64,12 +68,22 @@ class CellResult:
     n_preemptions: int
     n_launch_failures: int
     wall_s: float
+    # token-level metrics — populated only for replica_model="token"
+    # cells and omitted from to_dict() when None, so request-level
+    # artifacts keep their historical shape
+    ttft_p50_s: Optional[float] = None
+    ttft_p99_s: Optional[float] = None
+    tpot_p50_s: Optional[float] = None
+    tpot_p99_s: Optional[float] = None
+    goodput_rps: Optional[float] = None
+    slo_attainment: Optional[float] = None
 
     @staticmethod
     def from_result(
         labels: Mapping[str, Any], res: ServingResult, wall_s: float
     ) -> "CellResult":
         lat = res.latencies_s
+        tok = res.token
         return CellResult(
             labels=dict(labels),
             n_requests=res.n_requests,
@@ -86,6 +100,14 @@ class CellResult:
             n_preemptions=res.n_preemptions,
             n_launch_failures=res.n_launch_failures,
             wall_s=wall_s,
+            # NaN percentiles (a token cell with zero completions) become
+            # None so the JSON artifact stays strictly parseable
+            ttft_p50_s=_finite(tok.ttft_pct(50)) if tok else None,
+            ttft_p99_s=_finite(tok.ttft_pct(99)) if tok else None,
+            tpot_p50_s=_finite(tok.tpot_pct(50)) if tok else None,
+            tpot_p99_s=_finite(tok.tpot_pct(99)) if tok else None,
+            goodput_rps=tok.goodput_rps if tok else None,
+            slo_attainment=tok.slo_attainment if tok else None,
         )
 
     @property
@@ -98,6 +120,8 @@ class CellResult:
             if f.name == "labels":
                 continue
             v = getattr(self, f.name)
+            if v is None:
+                continue
             if round_to is not None and isinstance(v, float) \
                     and np.isfinite(v):
                 v = round(v, round_to)

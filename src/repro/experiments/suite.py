@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import json
 import os
 import time
 from typing import (
@@ -95,9 +96,12 @@ class Scenario:
 def _workload_tape_key(spec: ServiceSpec) -> Tuple:
     """Tapes are equal iff workload spec and arrival horizon are equal."""
     w = spec.workload
+    # args may hold unhashable values (e.g. a client_regions mapping) —
+    # canonical JSON keeps the key hashable and order-insensitive
+    args_key = json.dumps(dict(w.args), sort_keys=True, default=repr)
     return (
         w.kind, w.rate_per_s, w.seed,
-        tuple(sorted(w.args.items())),
+        args_key,
         spec.sim.duration_s - spec.sim.drain_s,
     )
 
@@ -210,6 +214,11 @@ class ScenarioSuite:
         # no forecasters axis: the base forecast section (if any) applies
         # to every cell and no "forecaster" label column is emitted
         forecasters: Tuple[Optional[str], ...] = sweep.forecasters or (None,)
+        # no replica_models axis: every cell keeps sim.replica_model and
+        # no "replica_model" label column is emitted
+        replica_models: Tuple[Optional[str], ...] = (
+            sweep.replica_models or (None,)
+        )
 
         policy_labels = _disambiguate(
             [p.name for p in policies],
@@ -225,12 +234,15 @@ class ScenarioSuite:
         )
 
         scenarios: List[Scenario] = []
-        for (pol, plabel), tr, (wl, wlabel), seed, fc in itertools.product(
-            zip(policies, policy_labels),
-            traces,
-            zip(workloads, workload_labels),
-            seeds,
-            forecasters,
+        for (pol, plabel), tr, (wl, wlabel), seed, fc, rm in (
+            itertools.product(
+                zip(policies, policy_labels),
+                traces,
+                zip(workloads, workload_labels),
+                seeds,
+                forecasters,
+                replica_models,
+            )
         ):
             if fc is not None and not getattr(
                 policy_class(pol.name), "uses_forecast", False
@@ -250,15 +262,20 @@ class ScenarioSuite:
                 forecast = dataclasses.replace(
                     base.forecast or ForecastSpec(), name=fc
                 )
+            sim = base.sim
+            if rm is not None and sim.replica_model != rm:
+                sim = dataclasses.replace(sim, replica_model=rm)
             cell_spec = dataclasses.replace(
                 base,
                 name=(f"{base.name}-{plabel}-{tr}-{wlabel}"
                       f"-s{wl_seeded.seed}"
-                      + (f"-{fc}" if fc is not None else "")),
+                      + (f"-{fc}" if fc is not None else "")
+                      + (f"-{rm}" if rm is not None else "")),
                 replica_policy=pol,
                 trace=tr,
                 workload=wl_seeded,
                 forecast=forecast,
+                sim=sim,
                 sweep=None,
             )
             labels = {
@@ -269,6 +286,8 @@ class ScenarioSuite:
             }
             if fc is not None:
                 labels["forecaster"] = fc
+            if rm is not None:
+                labels["replica_model"] = rm
             scenarios.append(
                 Scenario(
                     labels=labels,

@@ -102,6 +102,10 @@ def main(argv=None) -> int:
     ap.add_argument("--engine", default=None,
                     choices=["vector", "legacy"],
                     help="override sim.engine for this run")
+    ap.add_argument("--replica-model", default=None,
+                    choices=["request", "token"],
+                    help="override sim.replica_model for this run "
+                    "(token = continuous batching + TTFT/TPOT/goodput)")
     args = ap.parse_args(argv)
 
     from repro.service import SpecError
@@ -113,6 +117,16 @@ def main(argv=None) -> int:
 
             spec = dataclasses.replace(
                 spec, sim=dataclasses.replace(spec.sim, engine=args.engine)
+            )
+        if args.replica_model and \
+                spec.sim.replica_model != args.replica_model:
+            import dataclasses
+
+            spec = dataclasses.replace(
+                spec,
+                sim=dataclasses.replace(
+                    spec.sim, replica_model=args.replica_model
+                ),
             )
         if args.sweep:
             return _run_sweep(spec, args)

@@ -33,7 +33,9 @@ from repro.service.spec import (
     ReplicaPolicySpec,
     ResourceSpec,
     ServiceSpec,
+    ServingSpec,
     SimSpec,
+    SLOSpec,
     SpecError,
     SweepSpec,
     WorkloadSpec,
@@ -49,7 +51,9 @@ __all__ = [
     "ResourceSpec",
     "Service",
     "ServiceSpec",
+    "ServingSpec",
     "SimSpec",
+    "SLOSpec",
     "SpecError",
     "SweepSpec",
     "WorkloadSpec",

@@ -28,6 +28,7 @@ from repro.serving.load_balancer import (
     LoadBalancer,
     RoundRobinBalancer,
 )
+from repro.serving.token.config import TokenSchedulerConfig
 from repro.serving.engine import VectorizedServingEngine
 from repro.serving.sim import ServingSimulator
 from repro.service.spec import ResourceSpec, ServiceSpec, SpecError
@@ -203,6 +204,18 @@ def build_service(
         source=spec.latency.source,
         profile=spec.latency.profile,
     )
+    serving = spec.serving
+    token_knobs = None
+    if sim_spec.replica_model == "token":
+        token_knobs = TokenSchedulerConfig(
+            slo_ttft_s=serving.slo.ttft_s,
+            slo_tpot_s=serving.slo.tpot_s,
+            prefill_chunk_tokens=serving.prefill_chunk_tokens,
+            max_batch=serving.max_batch,
+            kv_budget_tokens=serving.kv_budget_tokens,
+            iter_overhead_s=serving.iter_overhead_s,
+            goodput_window_s=serving.goodput_window_s,
+        )
     simulator = engine_cls(
         trace,
         policy,
@@ -224,7 +237,10 @@ def build_service(
         sub_step_s=sub_step,
         workload_name=spec.workload.kind,
         concurrency=sim_spec.concurrency,
+        concurrency_cap=serving.concurrency_cap,
         latency_model=latency_model,
+        replica_model=sim_spec.replica_model,
+        token_scheduler=token_knobs,
     )
     return ResolvedService(
         spec=spec,

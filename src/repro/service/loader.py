@@ -23,7 +23,9 @@ from repro.service.spec import (
     ReplicaPolicySpec,
     ResourceSpec,
     ServiceSpec,
+    ServingSpec,
     SimSpec,
+    SLOSpec,
     SpecError,
     SweepSpec,
     WorkloadSpec,
@@ -131,11 +133,12 @@ def _sweep_workload(entry: Any) -> WorkloadSpec:
 
 
 def _sweep_from_dict(d: Mapping[str, Any]) -> SweepSpec:
-    _check_keys(
-        d, ("policies", "traces", "workloads", "seeds", "forecasters"),
-        "sweep",
+    keys = (
+        "policies", "traces", "workloads", "seeds", "forecasters",
+        "replica_models",
     )
-    for key in ("policies", "traces", "workloads", "seeds", "forecasters"):
+    _check_keys(d, keys, "sweep")
+    for key in keys:
         if key in d and not isinstance(d[key], (list, tuple)):
             raise SpecError(
                 f"sweep.{key} must be a list, got {type(d[key]).__name__}"
@@ -152,13 +155,43 @@ def _sweep_from_dict(d: Mapping[str, Any]) -> SweepSpec:
             raise SpecError(
                 f"sweep.forecasters entries must be strings, got {fc!r}"
             )
+    replica_models = tuple(d.get("replica_models", ()))
+    for rm in replica_models:
+        if not isinstance(rm, str):
+            raise SpecError(
+                f"sweep.replica_models entries must be strings, got {rm!r}"
+            )
     return SweepSpec(
         policies=tuple(_sweep_policy(e) for e in d.get("policies", ())),
         traces=traces,
         workloads=tuple(_sweep_workload(e) for e in d.get("workloads", ())),
         seeds=tuple(d.get("seeds", ())),
         forecasters=forecasters,
+        replica_models=replica_models,
     )
+
+
+def _serving_from_dict(d: Mapping[str, Any]) -> "tuple[ServingSpec, Any]":
+    """Build the serving section; also returns the ``replica_model``
+    sugar key (canonical home: ``sim.replica_model``)."""
+    _check_keys(
+        d,
+        ("replica_model", "slo", "concurrency_cap", "prefill_chunk_tokens",
+         "max_batch", "kv_budget_tokens", "iter_overhead_s",
+         "goodput_window_s"),
+        "serving",
+    )
+    kw: dict = {
+        k: d[k] for k in d if k not in ("replica_model", "slo")
+    }
+    slo = d.get("slo")
+    if slo is not None:
+        if not isinstance(slo, Mapping):
+            raise SpecError(
+                f"serving.slo must be a mapping, got {type(slo).__name__}"
+            )
+        kw["slo"] = SLOSpec(**_pick(slo, SLOSpec, "serving.slo"))
+    return ServingSpec(**kw), d.get("replica_model")
 
 
 def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
@@ -172,8 +205,8 @@ def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
     _check_keys(
         d,
         ("name", "model", "trace", "resources", "replica_policy",
-         "autoscaler", "workload", "latency", "forecast", "sim",
-         "load_balancer", "sweep"),
+         "autoscaler", "workload", "latency", "forecast", "serving",
+         "sim", "load_balancer", "sweep"),
         "service spec",
     )
     try:
@@ -199,7 +232,21 @@ def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
             kw["forecast"] = ForecastSpec(
                 **_pick(_section(d, "forecast"), ForecastSpec, "forecast")
             )
-        kw["sim"] = SimSpec(**_pick(_section(d, "sim"), SimSpec, "sim"))
+        kw["serving"], serving_rm = _serving_from_dict(
+            _section(d, "serving")
+        )
+        sim_kw = _pick(_section(d, "sim"), SimSpec, "sim")
+        if serving_rm is not None:
+            # serving.replica_model is YAML sugar for sim.replica_model;
+            # a conflicting explicit sim value is a spec error
+            if sim_kw.get("replica_model", serving_rm) != serving_rm:
+                raise SpecError(
+                    f"serving.replica_model ({serving_rm!r}) conflicts "
+                    f"with sim.replica_model "
+                    f"({sim_kw['replica_model']!r}); set one"
+                )
+            sim_kw["replica_model"] = serving_rm
+        kw["sim"] = SimSpec(**sim_kw)
         if d.get("sweep") is not None:
             kw["sweep"] = _sweep_from_dict(_section(d, "sweep"))
         spec = ServiceSpec(**kw)

@@ -46,6 +46,8 @@ __all__ = [
     "WorkloadSpec",
     "LatencySpec",
     "ForecastSpec",
+    "SLOSpec",
+    "ServingSpec",
     "SimSpec",
     "SweepSpec",
     "ServiceSpec",
@@ -416,6 +418,109 @@ class ForecastSpec:
 
 
 # ---------------------------------------------------------------------------
+# Serving data plane (token-level continuous batching, SLOs)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSpec:
+    """Token-level service-level objectives: TTFT and TPOT targets.
+
+    A request attains the SLO when its time-to-first-token and its mean
+    time-per-output-token are both within target; goodput is the
+    throughput of attaining requests (``repro.serving.token.metrics``).
+    """
+
+    ttft_s: float = 10.0
+    tpot_s: float = 0.2
+
+    def __post_init__(self) -> None:
+        _require(
+            self.ttft_s > 0,
+            f"serving.slo.ttft_s must be positive, got {self.ttft_s}",
+        )
+        _require(
+            self.tpot_s > 0,
+            f"serving.slo.tpot_s must be positive, got {self.tpot_s}",
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingSpec:
+    """Replica data-plane knobs (shared by both serving engines).
+
+    ``concurrency_cap`` bounds the *request-level* model's model-derived
+    concurrency default (``min(max_concurrency(), cap)`` when
+    ``sim.concurrency`` is null) — historically a hardcoded 16.  The
+    remaining fields configure the *token-level* engine selected by
+    ``sim.replica_model: token``: the SLO targets, the per-iteration
+    chunked-prefill budget, optional batch-size / KV-budget caps (the KV
+    budget otherwise derives from the latency model's HBM arithmetic),
+    a per-iteration scheduler overhead, and the goodput window.  In YAML
+    the section also accepts ``replica_model`` as sugar for
+    ``sim.replica_model``.
+    """
+
+    slo: SLOSpec = dataclasses.field(default_factory=SLOSpec)
+    concurrency_cap: int = 16
+    prefill_chunk_tokens: int = 512
+    max_batch: Optional[int] = None
+    kv_budget_tokens: Optional[int] = None
+    iter_overhead_s: float = 0.0
+    goodput_window_s: float = 60.0
+
+    def __post_init__(self) -> None:
+        _require(
+            self.concurrency_cap >= 1,
+            f"serving.concurrency_cap must be >= 1, "
+            f"got {self.concurrency_cap}",
+        )
+        _require(
+            self.prefill_chunk_tokens >= 1,
+            f"serving.prefill_chunk_tokens must be >= 1, "
+            f"got {self.prefill_chunk_tokens}",
+        )
+        if self.max_batch is not None:
+            _require(
+                self.max_batch >= 1,
+                f"serving.max_batch must be >= 1, got {self.max_batch}",
+            )
+        if self.kv_budget_tokens is not None:
+            _require(
+                self.kv_budget_tokens >= 1,
+                f"serving.kv_budget_tokens must be >= 1, "
+                f"got {self.kv_budget_tokens}",
+            )
+        _require(
+            self.iter_overhead_s >= 0,
+            f"serving.iter_overhead_s must be >= 0, "
+            f"got {self.iter_overhead_s}",
+        )
+        _require(
+            self.goodput_window_s > 0,
+            f"serving.goodput_window_s must be positive, "
+            f"got {self.goodput_window_s}",
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "slo": self.slo.to_dict(),
+            "concurrency_cap": self.concurrency_cap,
+            "prefill_chunk_tokens": self.prefill_chunk_tokens,
+            "iter_overhead_s": self.iter_overhead_s,
+            "goodput_window_s": self.goodput_window_s,
+        }
+        if self.max_batch is not None:
+            out["max_batch"] = self.max_batch
+        if self.kv_budget_tokens is not None:
+            out["kv_budget_tokens"] = self.kv_budget_tokens
+        return out
+
+
+# ---------------------------------------------------------------------------
 # Simulation horizon / fabric knobs
 # ---------------------------------------------------------------------------
 
@@ -432,6 +537,14 @@ class SimSpec:
     per-request object simulator in ``repro.serving.sim``.  The two are
     decision-for-decision equivalent (see ``tests/test_differential.py``);
     the vector engine is simply several times faster.
+
+    ``replica_model`` picks how a replica prices work: ``"request"``
+    (default) is the M/G/c model with frozen per-request service times;
+    ``"token"`` is the iteration-level continuous-batching model in
+    ``repro.serving.token`` (KV-budget admission, chunked prefill,
+    batch-dependent decode steps, TTFT/TPOT/goodput metrics).  Both
+    engines support both models; token-mode knobs live in the
+    ``serving:`` section.
     """
 
     duration_hours: float = 4.0
@@ -446,12 +559,22 @@ class SimSpec:
     seed: int = 0
     record_series: bool = True
     engine: str = "vector"
+    replica_model: str = "request"
 
     def __post_init__(self) -> None:
         _require(
             self.engine in ENGINE_NAMES,
             f"sim.engine must be one of {list(ENGINE_NAMES)}, "
             f"got {self.engine!r}",
+        )
+        # single source of truth for valid models is the serving layer
+        # (deferred import keeps spec module import cheap)
+        from repro.serving.sim import REPLICA_MODELS
+
+        _require(
+            self.replica_model in REPLICA_MODELS,
+            f"sim.replica_model must be one of "
+            f"{list(REPLICA_MODELS)}, got {self.replica_model!r}",
         )
         _require(
             self.duration_hours > 0,
@@ -502,7 +625,7 @@ class SimSpec:
 @dataclasses.dataclass(frozen=True)
 class SweepSpec:
     """A scenario grid: ``policies × traces × workloads × seeds``
-    (× ``forecasters`` when that axis is set).
+    (× ``forecasters`` / ``replica_models`` when those axes are set).
 
     Every axis left empty falls back to the base spec's single value, so a
     spec with ``sweep: {}`` expands to exactly one scenario.  Seeds
@@ -510,6 +633,8 @@ class SweepSpec:
     replicated measurements of one configuration.  Forecaster entries
     override ``forecast.name`` per cell (vanilla policies in the same
     grid ignore the section, so predictor × policy backtests compose).
+    Replica-model entries override ``sim.replica_model`` per cell, so a
+    request-level vs token-level comparison replays one request tape.
 
         sweep:
           policies: [spothedge, risk_spothedge, ondemand_only]
@@ -517,6 +642,7 @@ class SweepSpec:
           workloads: [poisson, arena]
           seeds: [0, 1, 2]
           forecasters: [persistence, markov]
+          replica_models: [request, token]
     """
 
     policies: Tuple[ReplicaPolicySpec, ...] = ()
@@ -524,6 +650,7 @@ class SweepSpec:
     workloads: Tuple["WorkloadSpec", ...] = ()
     seeds: Tuple[int, ...] = ()
     forecasters: Tuple[str, ...] = ()
+    replica_models: Tuple[str, ...] = ()
 
     def __post_init__(self) -> None:
         for tr in self.traces:
@@ -540,6 +667,15 @@ class SweepSpec:
                 bool(fc),
                 "sweep.forecasters entries must be non-empty strings",
             )
+        if self.replica_models:
+            from repro.serving.sim import REPLICA_MODELS
+
+            for rm in self.replica_models:
+                _require(
+                    rm in REPLICA_MODELS,
+                    f"sweep.replica_models entries must be one of "
+                    f"{list(REPLICA_MODELS)}, got {rm!r}",
+                )
 
     @property
     def size(self) -> int:
@@ -550,6 +686,7 @@ class SweepSpec:
             * max(len(self.workloads), 1)
             * max(len(self.seeds), 1)
             * max(len(self.forecasters), 1)
+            * max(len(self.replica_models), 1)
         )
 
     def to_dict(self) -> Dict[str, Any]:
@@ -564,6 +701,8 @@ class SweepSpec:
             out["seeds"] = list(self.seeds)
         if self.forecasters:
             out["forecasters"] = list(self.forecasters)
+        if self.replica_models:
+            out["replica_models"] = list(self.replica_models)
         return out
 
 
@@ -592,6 +731,7 @@ class ServiceSpec:
     workload: WorkloadSpec = dataclasses.field(default_factory=WorkloadSpec)
     latency: LatencySpec = dataclasses.field(default_factory=LatencySpec)
     forecast: Optional[ForecastSpec] = None
+    serving: ServingSpec = dataclasses.field(default_factory=ServingSpec)
     sim: SimSpec = dataclasses.field(default_factory=SimSpec)
     load_balancer: str = "least_loaded"
     sweep: Optional[SweepSpec] = None
@@ -683,6 +823,7 @@ class ServiceSpec:
             "autoscaler": self.autoscaler.to_dict(),
             "workload": self.workload.to_dict(),
             "latency": self.latency.to_dict(),
+            "serving": self.serving.to_dict(),
             "sim": self.sim.to_dict(),
             "load_balancer": self.load_balancer,
         }

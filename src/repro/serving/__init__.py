@@ -22,6 +22,13 @@ from repro.serving.latency import (
 from repro.serving.load_balancer import LeastLoadedBalancer, RoundRobinBalancer
 from repro.serving.replica import Replica, ReplicaState
 from repro.serving.sim import ServingSimulator, ServingResult
+from repro.serving.token import (
+    ContinuousBatch,
+    TokenEngineConfig,
+    TokenReplica,
+    TokenSchedulerConfig,
+    TokenStats,
+)
 
 __all__ = [
     "LatencyModel",
@@ -33,5 +40,10 @@ __all__ = [
     "ReplicaState",
     "ServingSimulator",
     "ServingResult",
+    "ContinuousBatch",
+    "TokenEngineConfig",
+    "TokenReplica",
+    "TokenSchedulerConfig",
+    "TokenStats",
     "VectorizedServingEngine",
 ]

@@ -29,6 +29,16 @@ assigns requests to replicas with the same ``(load, rtt, id)`` /
 round-robin rules, applies the same interference factor at dispatch, and
 fails the same requests at the same instants.  ``tests/test_differential.py``
 locks the equivalence down; ``tests/test_golden.py`` pins the metrics.
+
+``replica_model="token"`` switches the request path to the
+continuous-batching model (``repro.serving.token``): each replica slot
+carries a :class:`ContinuousBatch` whose per-sequence state lives in
+NumPy arrays, dispatch enqueues tape indices into batches instead of
+pushing precomputed finish times, and a per-sub-tick batched step loop
+advances every busy batch (closed-form decode blocks, so cost scales
+with joins/leaves, not decode iterations).  Token mode is
+decision-for-decision equivalent to the legacy simulator's
+``TokenReplica`` path (``tests/test_token_engine.py``).
 """
 
 from __future__ import annotations
@@ -52,7 +62,13 @@ from repro.serving.load_balancer import (
     LoadBalancer,
     RoundRobinBalancer,
 )
-from repro.serving.sim import ServingResult
+from repro.serving.sim import REPLICA_MODELS, ServingResult
+from repro.serving.token.batch import ContinuousBatch
+from repro.serving.token.config import (
+    TokenEngineConfig,
+    TokenSchedulerConfig,
+)
+from repro.serving.token.metrics import TokenRecord, TokenStats
 from repro.workloads.arrivals import Request
 
 __all__ = ["VectorizedServingEngine"]
@@ -66,7 +82,7 @@ class _Rep:
     """Array-era replica record: plain slots, no FSM object, no probes."""
 
     __slots__ = ("inst", "slot", "rid", "dead", "rtt",
-                 "running", "queue", "qage", "qmin")
+                 "running", "queue", "qage", "qmin", "batch")
 
     def __init__(self, inst: Instance, slot: int,
                  rtt: List[float]) -> None:
@@ -79,9 +95,12 @@ class _Rep:
         self.queue: List[int] = []                   # req indices, FIFO
         self.qage: List[float] = []          # parallel arrival times
         self.qmin = _INF                     # lower bound on queued arrivals
+        self.batch: Optional[ContinuousBatch] = None   # token mode only
 
     @property
     def load(self) -> int:
+        if self.batch is not None:
+            return self.batch.load
         return len(self.running) + len(self.queue)
 
 
@@ -104,7 +123,10 @@ class VectorizedServingEngine:
         sub_step_s: float = 1.0,
         workload_name: str = "workload",
         concurrency: Optional[int] = None,
+        concurrency_cap: int = 16,
         latency_model: Optional[LatencyModel] = None,
+        replica_model: str = "request",
+        token_scheduler: Optional[TokenSchedulerConfig] = None,
     ) -> None:
         self.catalog = catalog or default_catalog()
         self.cfg = cfg
@@ -120,8 +142,27 @@ class VectorizedServingEngine:
         self.sub_step_s = sub_step_s
         self.workload_name = workload_name
         self.concurrency = concurrency or min(
-            self.latency_model.max_concurrency(), 16
+            self.latency_model.max_concurrency(), concurrency_cap
         )
+        if replica_model not in REPLICA_MODELS:
+            raise ValueError(
+                f"replica_model must be one of {list(REPLICA_MODELS)}, "
+                f"got {replica_model!r}"
+            )
+        self.replica_model = replica_model
+        self._token_knobs = token_scheduler or TokenSchedulerConfig()
+        self._token_cfg: Optional[TokenEngineConfig] = (
+            TokenEngineConfig.from_latency(
+                self.latency_model, self._token_knobs
+            )
+            if replica_model == "token" else None
+        )
+        self._token_records: List[TokenRecord] = []
+        self._busy: Set[int] = set()         # slots with live batch work
+        self._n_kv_preempted = 0
+        self._n_killed_queued = 0
+        self._lost_prefill_tokens = 0
+        self._lost_decode_tokens = 0
 
         lb = lb or LeastLoadedBalancer()
         # exact types only: a subclass may override pick(), and silently
@@ -163,6 +204,10 @@ class VectorizedServingEngine:
         # in the per-request loops, and .tolist() round-trips exactly
         self._arr_l: List[float] = self._arr.tolist()
         self._svc_l: List[float] = self._svc.tolist()
+        if self._token_cfg is not None:
+            # token mode prices work in tokens, not frozen service times
+            self._ptok_l: List[int] = [int(v) for v in p_tok]
+            self._otok_l: List[int] = [int(v) for v in o_tok]
 
         # client regions as small int codes; each replica precomputes its
         # RTT per code on creation
@@ -231,6 +276,8 @@ class VectorizedServingEngine:
             for creg in self._client_regions
         ]
         rep = _Rep(inst, len(self._reps), rtt)
+        if self._token_cfg is not None:
+            rep.batch = ContinuousBatch(self._token_cfg)
         self._reps.append(rep)
         self._live.append(rep)
         self._by_id[inst.id] = rep
@@ -239,6 +286,26 @@ class VectorizedServingEngine:
     def _kill(self, rep: _Rep) -> None:
         """Preemption/termination: in-flight then queued back to pending."""
         if rep.dead:
+            return
+        if rep.batch is not None:
+            # token mode: the whole batch loses its KV state; every
+            # request (in-flight and queued) retries client-side
+            rep.dead = True
+            self._live_dirty = True
+            kr = rep.batch.kill()
+            arr = self._arr_l
+            pending = self._pending
+            pmin = self._pmin
+            for i in kr.keys:
+                pending.append(i)
+                if arr[i] < pmin:
+                    pmin = arr[i]
+            self._pmin = pmin
+            self._busy.discard(rep.slot)
+            self._n_kv_preempted += kr.n_batch
+            self._n_killed_queued += kr.n_queued
+            self._lost_prefill_tokens += kr.lost_prefill_tokens
+            self._lost_decode_tokens += kr.lost_decode_tokens
             return
         rep.dead = True
         self._live_dirty = True
@@ -287,7 +354,7 @@ class VectorizedServingEngine:
         self._ready_reps = ready
         self._ready_slots = [r.slot for r in ready]
         self._pos = {r.slot: j for j, r in enumerate(ready)}
-        self._loads = [len(r.running) + len(r.queue) for r in ready]
+        self._loads = [r.load for r in ready]
         self._ids = [r.rid for r in ready]
         self._cols = {}
 
@@ -318,10 +385,14 @@ class VectorizedServingEngine:
         dt = cluster.config.control_interval_s
         t = now
         end = now + dt
+        token = self._token_cfg is not None
         # identical float accumulation to the legacy loop so grid points,
         # arrival batches and timeout instants match bit-for-bit
         while t < end:
-            if self._active(t):
+            if token:
+                if self._active_token(t):
+                    self._process_token(t)
+            elif self._active(t):
                 self._process(t, cluster)
             t += self.sub_step_s
         # flush arrival observations before the cluster reads target():
@@ -597,12 +668,179 @@ class VectorizedServingEngine:
                 self._qn -= j
 
     # ------------------------------------------------------------------
+    # token mode: continuous-batching hot path
+    # ------------------------------------------------------------------
+    def _active_token(self, t: float) -> bool:
+        """Token-mode activity check: arrivals due, routable/expirable
+        pending work, or any replica with live batch state."""
+        if self._ptr < self._n and self._arr_l[self._ptr] <= t:
+            return True
+        if self._pending:
+            if self._ready_slots:
+                return True
+            if t - self._pmin > self.timeout_s:
+                return True
+        if self._busy:
+            return True
+        return False
+
+    def _process_token(self, t: float) -> None:
+        # 1) arrivals (identical batching to the request-mode path)
+        ptr = self._ptr
+        if ptr < self._n and self._arr_l[ptr] <= t:
+            new_ptr = int(self._searchsorted(t, side="right"))
+            self._pending.extend(range(ptr, new_ptr))
+            m = self._arr_l[ptr]
+            if m < self._pmin:
+                self._pmin = m
+            self._ptr = new_ptr
+            self._obs.append((t, new_ptr - ptr))
+        # 2) route pending into replica batches
+        if self._pending:
+            self._dispatch_token(t)
+        # 3) run every busy batch's iterations up to t
+        if self._busy:
+            self._advance_batches(t)
+
+    def _dispatch_token(self, t: float) -> None:
+        pending = self._pending
+        arr = self._arr_l
+        timeout = self.timeout_s
+        ready = self._ready_slots
+        if not ready:
+            # nothing to route to; age out requests past their timeout
+            kept: List[int] = []
+            pmin = _INF
+            for i in pending:
+                if t - arr[i] > timeout:
+                    self.failed += 1
+                else:
+                    kept.append(i)
+                    if arr[i] < pmin:
+                        pmin = arr[i]
+            self._pending = kept
+            self._pmin = pmin
+            return
+        reps = self._reps
+        busy = self._busy
+        ptok = self._ptok_l
+        otok = self._otok_l
+        check_to = t - self._pmin > timeout
+        if self._lb_kind == "rr":
+            nready = len(ready)
+            loads = self._loads
+            cur = self._rr_cursor
+            for i in pending:
+                if check_to and t - arr[i] > timeout:
+                    self.failed += 1
+                    continue
+                j = cur % nready
+                s = ready[j]
+                cur += 1
+                if reps[s].batch.enqueue(i, ptok[i], otok[i], arr[i], t):
+                    loads[j] += 1
+                    busy.add(s)
+                else:
+                    self.failed += 1     # can never fit the KV budget
+            self._rr_cursor = cur
+        else:
+            # least-loaded waterfill over (load, rtt, id), load = batch
+            # occupancy + admission queue — same pick as the legacy LB
+            ready_reps = self._ready_reps
+            loads = self._loads
+            ids = self._ids
+            cols = self._cols
+            rcode = self._rcode_l
+            nready = len(ready)
+            rng = range(1, nready)
+            for i in pending:
+                if check_to and t - arr[i] > timeout:
+                    self.failed += 1
+                    continue
+                rc = rcode[i]
+                col = cols.get(rc)
+                if col is None:
+                    col = cols[rc] = [r.rtt[rc] for r in ready_reps]
+                best, bl, br, bi = 0, loads[0], col[0], ids[0]
+                for j in rng:
+                    lj = loads[j]
+                    if lj > bl:
+                        continue
+                    if lj < bl or col[j] < br or (
+                        col[j] == br and ids[j] < bi
+                    ):
+                        best, bl, br, bi = j, lj, col[j], ids[j]
+                rep = ready_reps[best]
+                if rep.batch.enqueue(i, ptok[i], otok[i], arr[i], t):
+                    loads[best] += 1
+                    busy.add(rep.slot)
+                else:
+                    self.failed += 1
+        self._pending = []
+        self._pmin = _INF
+
+    def _advance_batches(self, t: float) -> None:
+        timeout = self.timeout_s
+        loads = self._loads
+        pos = self._pos
+        rcode = self._rcode_l
+        records = self._token_records
+        idle: List[int] = []
+        for s in sorted(self._busy):
+            rep = self._reps[s]
+            batch = rep.batch
+            n_removed = 0
+            for c in batch.advance(t):
+                i = c.key
+                rtt = rep.rtt[rcode[i]]
+                e2e = c.finish_s - c.arrival_s + rtt
+                if e2e > timeout:
+                    self.failed += 1
+                else:
+                    self.latencies.append(e2e)
+                    self.completed += 1
+                    records.append(TokenRecord(
+                        req_id=i,
+                        arrival_s=c.arrival_s,
+                        first_token_s=c.first_token_s,
+                        finish_s=c.finish_s,
+                        output_tokens=c.output_tokens,
+                        rtt_s=rtt,
+                    ))
+                n_removed += 1
+            if timeout > 0 and batch.n_queued:
+                expired = batch.expire_queue(t, timeout)
+                self.failed += len(expired)
+                n_removed += len(expired)
+            if n_removed:
+                loads[pos[s]] -= n_removed
+            if batch.load == 0:
+                idle.append(s)
+        for s in idle:
+            self._busy.discard(s)
+
+    # ------------------------------------------------------------------
     def run(self, duration_s: Optional[float] = None) -> ServingResult:
         base = self.cluster.run(duration_s)
         # drain: anything still pending/in-flight past the horizon fails
         self.failed += len(self._pending)
         for rep in self._reps:
             self.failed += rep.load
+        token_stats = None
+        if self._token_cfg is not None:
+            knobs = self._token_knobs
+            token_stats = TokenStats.from_records(
+                self._token_records,
+                slo_ttft_s=knobs.slo_ttft_s,
+                slo_tpot_s=knobs.slo_tpot_s,
+                horizon_s=base.duration_s,
+                window_s=knobs.goodput_window_s,
+                n_requests=self._ptr,
+                n_kv_preempted_seqs=self._n_kv_preempted,
+                n_killed_queued=self._n_killed_queued,
+                lost_prefill_tokens=self._lost_prefill_tokens,
+                lost_decode_tokens=self._lost_decode_tokens,
+            )
         return ServingResult(
             policy=self.cluster.policy.name,
             trace=self.cluster.trace.name,
@@ -618,4 +856,5 @@ class VectorizedServingEngine:
             availability=base.availability,
             n_preemptions=base.n_preemptions,
             n_launch_failures=base.n_launch_failures,
+            token=token_stats,
         )

@@ -108,24 +108,38 @@ class LatencyModel:
         )
 
     # ------------------------------------------------------------------
-    def max_concurrency(self, max_ctx: int = 4096) -> int:
-        """Requests servable concurrently from leftover HBM (KV budget).
-        Attention-free archs are compute-limited instead (use 32)."""
+    def kv_bytes_per_token(self) -> float:
+        """K+V bf16 bytes one cached token occupies (0: no KV cache)."""
         cfg = self.cfg
+        if cfg.num_kv_heads and cfg.resolved_head_dim:
+            return float(
+                2 * cfg.num_layers * cfg.num_kv_heads
+                * cfg.resolved_head_dim * 2
+            )
+        return 0.0
+
+    def free_kv_hbm_bytes(self) -> float:
+        """HBM left for KV cache: 90% usable minus bf16 weights,
+        floored at 5% (the shared budget arithmetic — also feeds the
+        token engine's ``kv_budget_tokens``)."""
         hbm = (
             self.itype.accel_count * self.itype.hbm_gib_per_accel * 2**30
         )
         weights = 2.0 * self.n_params
-        free = max(hbm * 0.9 - weights, hbm * 0.05)
-        if cfg.num_kv_heads and cfg.resolved_head_dim:
+        return max(hbm * 0.9 - weights, hbm * 0.05)
+
+    def max_concurrency(self, max_ctx: int = 4096) -> int:
+        """Requests servable concurrently from leftover HBM (KV budget).
+        Attention-free archs are compute-limited instead (use 32)."""
+        cfg = self.cfg
+        kv_tok = self.kv_bytes_per_token()
+        if kv_tok:
             slots = (
                 min(max_ctx, cfg.sliding_window or max_ctx)
             )
-            kv_per_req = (
-                2 * cfg.num_layers * slots * cfg.num_kv_heads
-                * cfg.resolved_head_dim * 2
+            return max(
+                1, int(self.free_kv_hbm_bytes() / (kv_tok * slots))
             )
-            return max(1, int(free / kv_per_req))
         return 32
 
 

@@ -46,12 +46,13 @@ class Replica:
         latency: LatencyModel,
         *,
         concurrency: Optional[int] = None,
+        concurrency_cap: int = 16,   # cap on the model-derived default
         timeout_s: float = 0.0,      # 0: requests never expire in queue
     ) -> None:
         self.instance = instance
         self.latency = latency
         self.concurrency = concurrency or min(
-            latency.max_concurrency(), 16
+            latency.max_concurrency(), concurrency_cap
         )
         self.timeout_s = timeout_s
         self.state = ReplicaState.PROVISIONING
@@ -131,10 +132,19 @@ class Replica:
         return done, expired
 
     def eta_if_submitted(self, req: Request, now: float) -> float:
-        """Rough completion estimate used by latency-aware LBs."""
+        """Rough completion estimate used by latency-aware LBs.
+
+        The backlog ahead of the new request is the queued work *plus*
+        the residual time of work already running — ignoring the latter
+        made estimates systematically optimistic on busy replicas (a
+        replica with full slots but an empty queue looked instantly
+        available)."""
         svc = self.latency.service_s(req.prompt_tokens, req.output_tokens)
-        backlog = sum(
+        residual = sum(
+            max(0.0, f.finish_s - now) for f in self.running
+        )
+        backlog = (residual + sum(
             self.latency.service_s(q.prompt_tokens, q.output_tokens)
             for q in self.queue
-        ) / max(self.concurrency, 1)
+        )) / max(self.concurrency, 1)
         return now + backlog + svc

@@ -14,7 +14,11 @@ Mechanics:
 * a request that cannot complete within ``timeout_s`` of its arrival is a
   failure (the paper's definition),
 * replica service times come from the roofline latency model; queueing is
-  M/G/c per replica with sub-tick stepping for accurate waits.
+  M/G/c per replica with sub-tick stepping for accurate waits,
+* ``replica_model="token"`` swaps the M/G/c replicas for the
+  continuous-batching model in ``repro.serving.token`` (KV-budget
+  admission, chunked prefill, batch-dependent decode steps) and attaches
+  TTFT/TPOT/goodput ``TokenStats`` to the result.
 """
 
 from __future__ import annotations
@@ -34,7 +38,15 @@ from repro.models.config import ModelConfig
 from repro.serving.latency import LatencyModel
 from repro.serving.load_balancer import LeastLoadedBalancer, LoadBalancer
 from repro.serving.replica import Replica, ReplicaState
+from repro.serving.token.config import (
+    TokenEngineConfig,
+    TokenSchedulerConfig,
+)
+from repro.serving.token.metrics import TokenRecord, TokenStats
+from repro.serving.token.replica import TokenReplica
 from repro.workloads.arrivals import Request
+
+REPLICA_MODELS = ("request", "token")
 
 
 @dataclasses.dataclass
@@ -53,6 +65,8 @@ class ServingResult:
     availability: float
     n_preemptions: int = 0
     n_launch_failures: int = 0
+    # token-level metrics (replica_model="token" runs only)
+    token: Optional[TokenStats] = None
 
     @property
     def failure_rate(self) -> float:
@@ -64,12 +78,19 @@ class ServingResult:
         return float(np.percentile(self.latencies_s, q))
 
     def summary(self) -> str:
-        return (
+        out = (
             f"{self.policy:>16s} @ {self.trace}/{self.workload} "
             f"p50={self.pct(50):6.2f}s p90={self.pct(90):6.2f}s "
             f"p99={self.pct(99):7.2f}s fail={self.failure_rate:6.2%} "
             f"cost={self.cost_vs_ondemand:6.2%} avail={self.availability:.2%}"
         )
+        if self.token is not None:
+            out += (
+                f" ttft_p50={self.token.ttft_pct(50):5.2f}s "
+                f"goodput={self.token.goodput_rps:.3f}req/s "
+                f"slo={self.token.slo_attainment:.2%}"
+            )
+        return out
 
 
 class ServingSimulator:
@@ -89,7 +110,10 @@ class ServingSimulator:
         sub_step_s: float = 1.0,
         workload_name: str = "workload",
         concurrency: Optional[int] = None,
+        concurrency_cap: int = 16,
         latency_model: Optional[LatencyModel] = None,
+        replica_model: str = "request",
+        token_scheduler: Optional[TokenSchedulerConfig] = None,
     ) -> None:
         self.catalog = catalog or default_catalog()
         self.cfg = cfg
@@ -106,6 +130,25 @@ class ServingSimulator:
         self.sub_step_s = sub_step_s
         self.workload_name = workload_name
         self.concurrency = concurrency
+        self.concurrency_cap = concurrency_cap
+        if replica_model not in REPLICA_MODELS:
+            raise ValueError(
+                f"replica_model must be one of {list(REPLICA_MODELS)}, "
+                f"got {replica_model!r}"
+            )
+        self.replica_model = replica_model
+        self._token_knobs = token_scheduler or TokenSchedulerConfig()
+        self._token_cfg: Optional[TokenEngineConfig] = (
+            TokenEngineConfig.from_latency(
+                self.latency_model, self._token_knobs
+            )
+            if replica_model == "token" else None
+        )
+        self._token_records: List[TokenRecord] = []
+        self._n_kv_preempted = 0
+        self._n_killed_queued = 0
+        self._lost_prefill_tokens = 0
+        self._lost_decode_tokens = 0
 
         self.requests = sorted(requests, key=lambda r: r.arrival_s)
         self._next_arrival = 0
@@ -137,14 +180,23 @@ class ServingSimulator:
         self.cluster.add_terminate_listener(self._on_dead)
 
     # ------------------------------------------------------------------
+    def _new_replica(self, inst: Instance) -> Replica:
+        if self._token_cfg is not None:
+            return TokenReplica(
+                inst, self.latency_model, self._token_cfg,
+                timeout_s=self.timeout_s,
+            )
+        return Replica(
+            inst, self.latency_model,
+            concurrency=self.concurrency,
+            concurrency_cap=self.concurrency_cap,
+            timeout_s=self.timeout_s,
+        )
+
     def _sync_replicas(self, now: float) -> None:
         for inst in self.cluster.instances:
             if inst.id not in self.replicas and inst.is_active():
-                self.replicas[inst.id] = Replica(
-                    inst, self.latency_model,
-                    concurrency=self.concurrency,
-                    timeout_s=self.timeout_s,
-                )
+                self.replicas[inst.id] = self._new_replica(inst)
             elif inst.id in self.replicas and not inst.is_active():
                 self._kill_replica(inst.id, now)
         for r in self.replicas.values():
@@ -157,6 +209,12 @@ class ServingSimulator:
         for req in rep.kill():
             # client retry: back into the pending pool
             self.pending.append(req)
+        if isinstance(rep, TokenReplica) and rep.kill_report is not None:
+            kr = rep.kill_report
+            self._n_kv_preempted += kr.n_batch
+            self._n_killed_queued += kr.n_queued
+            self._lost_prefill_tokens += kr.lost_prefill_tokens
+            self._lost_decode_tokens += kr.lost_decode_tokens
 
     def _on_dead(self, inst: Instance, now: float) -> None:
         self._kill_replica(inst.id, now)
@@ -178,19 +236,31 @@ class ServingSimulator:
         self.pending = still
 
     def _step_replicas(self, now: float) -> None:
+        token = self._token_cfg is not None
         for rep in self.replicas.values():
             if rep.state is not ReplicaState.READY:
                 continue
             done, expired = rep.step(now)
             self.failed += len(expired)
-            for req, finish in done:
-                e2e = finish - self._arrival[req.id] + \
-                    LoadBalancer.rtt_s(req, rep)
+            comps = rep.take_completions() if token else None
+            for k, (req, finish) in enumerate(done):
+                rtt = LoadBalancer.rtt_s(req, rep)
+                e2e = finish - self._arrival[req.id] + rtt
                 if e2e > self.timeout_s:
                     self.failed += 1
                 else:
                     self.latencies.append(e2e)
                     self.completed += 1
+                    if comps is not None:
+                        c = comps[k]
+                        self._token_records.append(TokenRecord(
+                            req_id=req.id,
+                            arrival_s=self._arrival[req.id],
+                            first_token_s=c.first_token_s,
+                            finish_s=c.finish_s,
+                            output_tokens=c.output_tokens,
+                            rtt_s=rtt,
+                        ))
 
     def _tick(self, now: float, cluster: ClusterSimulator) -> None:
         dt = cluster.config.control_interval_s
@@ -223,6 +293,21 @@ class ServingSimulator:
         for rep in self.replicas.values():
             self.failed += rep.load
         n_total = self._next_arrival
+        token_stats = None
+        if self._token_cfg is not None:
+            knobs = self._token_knobs
+            token_stats = TokenStats.from_records(
+                self._token_records,
+                slo_ttft_s=knobs.slo_ttft_s,
+                slo_tpot_s=knobs.slo_tpot_s,
+                horizon_s=base.duration_s,
+                window_s=knobs.goodput_window_s,
+                n_requests=n_total,
+                n_kv_preempted_seqs=self._n_kv_preempted,
+                n_killed_queued=self._n_killed_queued,
+                lost_prefill_tokens=self._lost_prefill_tokens,
+                lost_decode_tokens=self._lost_decode_tokens,
+            )
         return ServingResult(
             policy=self.cluster.policy.name,
             trace=self.cluster.trace.name,
@@ -238,4 +323,5 @@ class ServingSimulator:
             availability=base.availability,
             n_preemptions=base.n_preemptions,
             n_launch_failures=base.n_launch_failures,
+            token=token_stats,
         )

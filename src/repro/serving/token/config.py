@@ -1,0 +1,132 @@
+"""Token-engine configuration: scheduler knobs + derived physics.
+
+Two layers, deliberately separate:
+
+* :class:`TokenSchedulerConfig` — the *spec-visible knobs* (SLO targets,
+  prefill chunk size, batch/KV caps, per-iteration overhead).  The
+  service layer builds one from a ``ServiceSpec``'s ``serving:`` section;
+  defaults reproduce an idealized engine (no scheduler overhead).
+
+* :class:`TokenEngineConfig` — the *resolved physics* for one
+  (model × instance) pair, derived from a :class:`~repro.serving.latency.
+  LatencyModel` by :meth:`TokenEngineConfig.from_latency`:
+
+  - ``weight_read_s`` — one decode iteration's weight traffic over the
+    effective HBM bandwidth.  This is exactly
+    ``LatencyModel.decode_s_per_token()``: the weights are streamed once
+    per iteration and *amortized across the whole batch*, which is the
+    physical fact the request-level model's ad-hoc ``1 + 0.15·running``
+    interference factor was approximating.
+  - ``kv_read_s_per_token`` — per cached token, per iteration: each
+    decoding sequence re-reads its own KV cache, so KV traffic scales
+    with the batch's resident tokens while weight traffic does not.
+  - ``prefill_s_per_token`` — compute-bound prefill from the FLOPs
+    roofline (``2·N_active`` FLOPs per token over effective FLOP/s).
+  - ``kv_budget_tokens`` — the HBM left after weights, in tokens.  Same
+    arithmetic as ``LatencyModel.max_concurrency`` (90% usable HBM minus
+    bf16 weights, floored at 5%), just left in tokens instead of being
+    divided into fixed ``max_ctx`` request slots.  Attention-free
+    architectures (no KV cache) get an unbounded budget and zero KV
+    read cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.serving.latency import LatencyModel
+
+__all__ = [
+    "TokenSchedulerConfig",
+    "TokenEngineConfig",
+    "UNBOUNDED_KV_TOKENS",
+]
+
+# attention-free archs have no KV cache: effectively unlimited token slots
+UNBOUNDED_KV_TOKENS = 1 << 40
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenSchedulerConfig:
+    """Spec-visible knobs of the continuous-batching scheduler."""
+
+    slo_ttft_s: float = 10.0        # time-to-first-token SLO target
+    slo_tpot_s: float = 0.2         # time-per-output-token SLO target
+    prefill_chunk_tokens: int = 512  # prefill budget per iteration
+    max_batch: Optional[int] = None  # max sequences in flight (None: KV-bound)
+    kv_budget_tokens: Optional[int] = None   # override the derived budget
+    iter_overhead_s: float = 0.0    # scheduler overhead per iteration
+    goodput_window_s: float = 60.0  # goodput aggregation window
+
+    def __post_init__(self) -> None:
+        if self.slo_ttft_s <= 0 or self.slo_tpot_s <= 0:
+            raise ValueError(
+                f"SLO targets must be positive, got ttft={self.slo_ttft_s} "
+                f"tpot={self.slo_tpot_s}"
+            )
+        if self.prefill_chunk_tokens < 1:
+            raise ValueError(
+                f"prefill_chunk_tokens must be >= 1, "
+                f"got {self.prefill_chunk_tokens}"
+            )
+        if self.max_batch is not None and self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.kv_budget_tokens is not None and self.kv_budget_tokens < 1:
+            raise ValueError(
+                f"kv_budget_tokens must be >= 1, got {self.kv_budget_tokens}"
+            )
+        if self.iter_overhead_s < 0:
+            raise ValueError(
+                f"iter_overhead_s must be >= 0, got {self.iter_overhead_s}"
+            )
+        if self.goodput_window_s <= 0:
+            raise ValueError(
+                f"goodput_window_s must be positive, "
+                f"got {self.goodput_window_s}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEngineConfig:
+    """Resolved per-(model × instance) physics of the token engine."""
+
+    weight_read_s: float            # decode iteration floor (weights / HBM)
+    kv_read_s_per_token: float      # extra per resident KV token, per iter
+    prefill_s_per_token: float      # compute-bound prefill slope
+    overhead_s: float               # per-request tokenize/HTTP constant
+    iter_overhead_s: float
+    kv_budget_tokens: int
+    prefill_chunk_tokens: int
+    max_batch: int
+
+    @classmethod
+    def from_latency(
+        cls,
+        lm: LatencyModel,
+        knobs: Optional[TokenSchedulerConfig] = None,
+    ) -> "TokenEngineConfig":
+        knobs = knobs or TokenSchedulerConfig()
+        kv_bytes = lm.kv_bytes_per_token()
+        if kv_bytes > 0:
+            # the same free-HBM arithmetic as LatencyModel.max_concurrency
+            # (shared helpers), kept in tokens instead of fixed
+            # max_ctx-sized request slots
+            budget = max(1, int(lm.free_kv_hbm_bytes() / kv_bytes))
+            kv_read = kv_bytes / lm.hbm_bytes_per_s
+        else:
+            budget = UNBOUNDED_KV_TOKENS
+            kv_read = 0.0
+        if knobs.kv_budget_tokens is not None:
+            budget = knobs.kv_budget_tokens
+        return cls(
+            weight_read_s=lm.decode_s_per_token(),
+            kv_read_s_per_token=kv_read,
+            prefill_s_per_token=2.0 * lm._active_params / lm.flops_per_s,
+            overhead_s=lm.overhead_s,
+            iter_overhead_s=knobs.iter_overhead_s,
+            kv_budget_tokens=budget,
+            prefill_chunk_tokens=knobs.prefill_chunk_tokens,
+            max_batch=knobs.max_batch if knobs.max_batch is not None
+            else 1 << 30,
+        )

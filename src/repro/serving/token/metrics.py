@@ -1,0 +1,174 @@
+"""Token-level serving metrics: TTFT, TPOT, and goodput-vs-SLO.
+
+The paper's headline latency percentiles treat a request as one number;
+LLM serving SLOs do not.  The token engine therefore emits, per request:
+
+* **TTFT** — time to first token: arrival -> first decode iteration end,
+  including queueing, chunked prefill, the per-request overhead constant
+  and the client<->replica RTT (first byte crosses the network);
+* **TPOT** — time per output token: the mean inter-token gap over the
+  decode phase, ``(finish - first_token) / (output_tokens - 1)`` — pure
+  decode pace, independent of queueing and prefill.
+
+A request *attains the SLO* when both TTFT and TPOT are within their
+targets.  **Goodput** is the throughput of SLO-attaining requests
+(req/s) — the metric DistServe/AlpaServe-style systems optimize —
+reported both for the whole run and per wall-clock window so a
+preemption's goodput crater is visible in the series.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+__all__ = ["TokenRecord", "TokenStats"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenRecord:
+    """Token-level timeline of one *completed* request."""
+
+    req_id: int
+    arrival_s: float
+    first_token_s: float            # engine clock, incl. overhead_s
+    finish_s: float                 # engine clock, incl. overhead_s
+    output_tokens: int
+    rtt_s: float
+
+    @property
+    def ttft_s(self) -> float:
+        return self.first_token_s - self.arrival_s + self.rtt_s
+
+    @property
+    def tpot_s(self) -> float:
+        return (self.finish_s - self.first_token_s) / max(
+            self.output_tokens - 1, 1
+        )
+
+    @property
+    def e2e_s(self) -> float:
+        return self.finish_s - self.arrival_s + self.rtt_s
+
+
+@dataclasses.dataclass
+class TokenStats:
+    """Aggregated token-level metrics of one serving run."""
+
+    slo_ttft_s: float
+    slo_tpot_s: float
+    n_requests: int                 # every request that arrived
+    n_recorded: int                 # completions with token records
+    ttft_s: np.ndarray
+    tpot_s: np.ndarray
+    n_slo_ok: int
+    slo_attainment: float           # n_slo_ok / n_requests
+    goodput_rps: float              # n_slo_ok / horizon
+    window_s: float
+    windows: List[Dict[str, float]]
+    # preemption cost accounting (KV state is not recoverable)
+    n_kv_preempted_seqs: int = 0
+    n_killed_queued: int = 0
+    lost_prefill_tokens: int = 0
+    lost_decode_tokens: int = 0
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_records(
+        cls,
+        records: List[TokenRecord],
+        *,
+        slo_ttft_s: float,
+        slo_tpot_s: float,
+        horizon_s: float,
+        window_s: float,
+        n_requests: int,
+        n_kv_preempted_seqs: int = 0,
+        n_killed_queued: int = 0,
+        lost_prefill_tokens: int = 0,
+        lost_decode_tokens: int = 0,
+    ) -> "TokenStats":
+        n = len(records)
+        ttft = np.fromiter((r.ttft_s for r in records), np.float64, count=n)
+        tpot = np.fromiter((r.tpot_s for r in records), np.float64, count=n)
+        ok = (ttft <= slo_ttft_s) & (tpot <= slo_tpot_s)
+        n_ok = int(ok.sum())
+        horizon = max(float(horizon_s), 1e-9)
+        finish = np.fromiter(
+            (r.finish_s for r in records), np.float64, count=n
+        )
+        windows: List[Dict[str, float]] = []
+        n_windows = int(np.ceil(horizon / window_s)) if n else 0
+        if n_windows:
+            bins = np.clip(
+                (finish // window_s).astype(np.int64), 0, n_windows - 1
+            )
+            total = np.bincount(bins, minlength=n_windows)
+            good = np.bincount(
+                bins, weights=ok.astype(np.float64), minlength=n_windows
+            )
+            for k in range(n_windows):
+                windows.append({
+                    "t0_s": round(k * window_s, 6),
+                    "n_completed": int(total[k]),
+                    "n_slo_ok": int(good[k]),
+                    "goodput_rps": round(float(good[k]) / window_s, 6),
+                })
+        return cls(
+            slo_ttft_s=slo_ttft_s,
+            slo_tpot_s=slo_tpot_s,
+            n_requests=n_requests,
+            n_recorded=n,
+            ttft_s=ttft,
+            tpot_s=tpot,
+            n_slo_ok=n_ok,
+            slo_attainment=n_ok / max(n_requests, 1),
+            goodput_rps=n_ok / horizon,
+            window_s=window_s,
+            windows=windows,
+            n_kv_preempted_seqs=n_kv_preempted_seqs,
+            n_killed_queued=n_killed_queued,
+            lost_prefill_tokens=lost_prefill_tokens,
+            lost_decode_tokens=lost_decode_tokens,
+        )
+
+    # ------------------------------------------------------------------
+    def ttft_pct(self, q: float) -> float:
+        if len(self.ttft_s) == 0:
+            return float("nan")
+        return float(np.percentile(self.ttft_s, q))
+
+    def tpot_pct(self, q: float) -> float:
+        if len(self.tpot_s) == 0:
+            return float("nan")
+        return float(np.percentile(self.tpot_s, q))
+
+    def to_dict(self, include_windows: bool = True) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "slo_ttft_s": self.slo_ttft_s,
+            "slo_tpot_s": self.slo_tpot_s,
+            "n_requests": self.n_requests,
+            "n_recorded": self.n_recorded,
+            "n_slo_ok": self.n_slo_ok,
+            "slo_attainment": round(self.slo_attainment, 6),
+            "goodput_rps": round(self.goodput_rps, 6),
+            "ttft_p50_s": _r(self.ttft_pct(50)),
+            "ttft_p90_s": _r(self.ttft_pct(90)),
+            "ttft_p99_s": _r(self.ttft_pct(99)),
+            "tpot_p50_s": _r(self.tpot_pct(50)),
+            "tpot_p99_s": _r(self.tpot_pct(99)),
+            "n_kv_preempted_seqs": self.n_kv_preempted_seqs,
+            "n_killed_queued": self.n_killed_queued,
+            "lost_prefill_tokens": self.lost_prefill_tokens,
+            "lost_decode_tokens": self.lost_decode_tokens,
+            "window_s": self.window_s,
+        }
+        if include_windows:
+            out["windows"] = self.windows
+        return out
+
+
+def _r(v: float, nd: int = 6) -> Optional[float]:
+    return round(v, nd) if np.isfinite(v) else None

@@ -1,0 +1,112 @@
+"""TokenReplica: the continuous-batching engine behind the Replica API.
+
+A drop-in for :class:`repro.serving.replica.Replica` inside the legacy
+:class:`~repro.serving.sim.ServingSimulator`: same lifecycle (readiness
+probe, kill-on-preemption), same ``submit``/``step`` contract, but the
+request path runs through a :class:`~repro.serving.token.batch.
+ContinuousBatch` instead of M/G/c slots — requests join and leave the
+batch at iteration boundaries, queue when the KV cache is full, and lose
+all KV state on preemption.
+
+``step`` still returns ``(completions, expired)`` so the simulator's
+request accounting is untouched; the token-level timelines ride along in
+``take_completions()`` (parallel to the completions of the *same* step),
+from which the simulator builds :class:`TokenRecord`s with the RTT term.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.cluster.instance import Instance
+from repro.serving.latency import LatencyModel
+from repro.serving.replica import Replica, ReplicaState
+from repro.serving.token.batch import (
+    ContinuousBatch,
+    KillReport,
+    TokenCompletion,
+)
+from repro.serving.token.config import TokenEngineConfig
+from repro.workloads.arrivals import Request
+
+__all__ = ["TokenReplica"]
+
+
+class TokenReplica(Replica):
+    """One continuous-batching model replica on one instance."""
+
+    def __init__(
+        self,
+        instance: Instance,
+        latency: LatencyModel,
+        engine_cfg: TokenEngineConfig,
+        *,
+        timeout_s: float = 0.0,
+    ) -> None:
+        # concurrency slots are meaningless here (the batch admits by KV
+        # budget and max_batch); pass 1 to skip the M/G/c derivation
+        super().__init__(
+            instance, latency, concurrency=1, timeout_s=timeout_s
+        )
+        self.batch = ContinuousBatch(engine_cfg)
+        self.kill_report: Optional[KillReport] = None
+        self._by_key: Dict[int, Request] = {}
+        self._rejected: List[Request] = []
+        self._completions: List[TokenCompletion] = []
+
+    # -- request path ---------------------------------------------------
+    @property
+    def load(self) -> int:
+        return self.batch.load
+
+    def submit(self, req: Request, now: float) -> None:
+        ok = self.batch.enqueue(
+            req.id, req.prompt_tokens, req.output_tokens,
+            req.arrival_s, now,
+        )
+        if ok:
+            self._by_key[req.id] = req
+        else:
+            # prompt+output exceed the whole KV budget: unservable here
+            self._rejected.append(req)
+
+    def step(self, now: float) -> Tuple[
+        List[Tuple[Request, float]], List[Request]
+    ]:
+        done: List[Tuple[Request, float]] = []
+        for c in self.batch.advance(now):
+            req = self._by_key.pop(c.key)
+            done.append((req, c.finish_s))
+            self._completions.append(c)
+            self.completed += 1
+        expired: List[Request] = []
+        if self.timeout_s > 0:
+            for key in self.batch.expire_queue(now, self.timeout_s):
+                expired.append(self._by_key.pop(key))
+        if self._rejected:
+            expired.extend(self._rejected)
+            self._rejected = []
+        return done, expired
+
+    def take_completions(self) -> List[TokenCompletion]:
+        """Token timelines parallel to the last ``step``'s completions."""
+        out = self._completions
+        self._completions = []
+        return out
+
+    def kill(self) -> List[Request]:
+        self.state = ReplicaState.DEAD
+        report = self.batch.kill()
+        self.kill_report = report
+        failed = [self._by_key.pop(k) for k in report.keys]
+        failed.extend(self._rejected)
+        self._rejected = []
+        return failed
+
+    def eta_if_submitted(self, req: Request, now: float) -> float:
+        svc = (
+            self.batch.cfg.overhead_s
+            + req.prompt_tokens * self.batch.cfg.prefill_s_per_token
+            + req.output_tokens * self.batch.cfg.weight_read_s
+        )
+        return now + self.batch.backlog_hint_s() + svc

@@ -20,11 +20,14 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
-from typing import Iterator, List, Optional
+from typing import Iterator, List, Mapping, Optional, Sequence, Union
 
 import numpy as np
 
 _req_ids = itertools.count()
+
+# client_regions accepts {region: weight} or a bare region sequence
+ClientRegions = Union[Mapping[str, float], Sequence[str]]
 
 
 @dataclasses.dataclass
@@ -42,12 +45,61 @@ class Request:
 
 
 class Workload:
-    """Base class: generate requests over [0, duration_s)."""
+    """Base class: generate requests over [0, duration_s).
+
+    ``client_regions`` mixes request origins across regions — either a
+    ``{region: weight}`` mapping or a bare region list (equal weights).
+    The default (``None``) keeps the historical single-region behaviour
+    (every request from ``us-west-2``) and, crucially, draws *nothing*:
+    region assignment uses its own RNG stream derived from ``seed``, so
+    arrival times and token lengths are bit-identical with and without a
+    mixture — only the ``client_region`` fields differ.
+    """
 
     name = "workload"
 
-    def __init__(self, seed: int = 0) -> None:
+    def __init__(self, seed: int = 0,
+                 client_regions: Optional[ClientRegions] = None) -> None:
         self.seed = seed
+        self.client_regions: Optional[List[str]] = None
+        self._region_probs: Optional[np.ndarray] = None
+        if client_regions is not None:
+            if isinstance(client_regions, Mapping):
+                regions = list(client_regions)
+                weights = [float(client_regions[r]) for r in regions]
+            else:
+                regions = list(client_regions)
+                weights = [1.0] * len(regions)
+            if not regions:
+                raise ValueError("client_regions must name >= 1 region")
+            if any(not r or not isinstance(r, str) for r in regions):
+                raise ValueError(
+                    f"client_regions entries must be non-empty region "
+                    f"strings, got {regions!r}"
+                )
+            if any(w < 0 for w in weights) or sum(weights) <= 0:
+                raise ValueError(
+                    f"client_regions weights must be >= 0 and sum > 0, "
+                    f"got {weights!r}"
+                )
+            self.client_regions = regions
+            self._region_probs = (
+                np.asarray(weights, dtype=np.float64) / sum(weights)
+            )
+
+    def _assign_regions(self, requests: List[Request]) -> List[Request]:
+        """Stamp client regions from the mixture (no-op by default)."""
+        if self.client_regions is None or not requests:
+            return requests
+        # independent stream: never perturbs the arrival/length draws
+        rng = np.random.default_rng([int(self.seed) & 0x7FFFFFFF, 0xC119])
+        picks = rng.choice(
+            len(self.client_regions), size=len(requests),
+            p=self._region_probs,
+        )
+        for req, k in zip(requests, picks):
+            req.client_region = self.client_regions[int(k)]
+        return requests
 
     def generate(self, duration_s: float) -> List[Request]:
         raise NotImplementedError
@@ -76,8 +128,9 @@ class PoissonWorkload(Workload):
 
     name = "poisson"
 
-    def __init__(self, rate_per_s: float = 0.15, seed: int = 0) -> None:
-        super().__init__(seed)
+    def __init__(self, rate_per_s: float = 0.15, seed: int = 0,
+                 client_regions: Optional[ClientRegions] = None) -> None:
+        super().__init__(seed, client_regions=client_regions)
         if rate_per_s <= 0:
             raise ValueError("rate must be positive")
         self.rate = float(rate_per_s)
@@ -89,11 +142,11 @@ class PoissonWorkload(Workload):
         times = np.cumsum(gaps)
         times = times[times < duration_s]
         p, o = self._sample_lengths(rng, len(times))
-        return [
+        return self._assign_regions([
             Request(arrival_s=float(t), prompt_tokens=int(pi),
                     output_tokens=int(oi))
             for t, pi, oi in zip(times, p, o)
-        ]
+        ])
 
 
 class ArenaWorkload(Workload):
@@ -118,8 +171,9 @@ class ArenaWorkload(Workload):
     )
 
     def __init__(self, base_rate_per_s: float = 0.3, seed: int = 0,
-                 spike_prob: float = 0.002, spike_mult: float = 12.0) -> None:
-        super().__init__(seed)
+                 spike_prob: float = 0.002, spike_mult: float = 12.0,
+                 client_regions: Optional[ClientRegions] = None) -> None:
+        super().__init__(seed, client_regions=client_regions)
         self.base_rate = float(base_rate_per_s)
         self.spike_prob = float(spike_prob)
         self.spike_mult = float(spike_mult)
@@ -155,7 +209,7 @@ class ArenaWorkload(Workload):
             regime = int(rng.choice(3, p=probs))
             t = end
         out.sort(key=lambda r: r.arrival_s)
-        return out
+        return self._assign_regions(out)
 
 
 class MAFWorkload(Workload):
@@ -166,8 +220,9 @@ class MAFWorkload(Workload):
     def __init__(self, base_rate_per_s: float = 0.25, seed: int = 0,
                  diurnal_depth: float = 0.8,
                  spike_prob_per_min: float = 0.004,
-                 spike_mult: float = 20.0) -> None:
-        super().__init__(seed)
+                 spike_mult: float = 20.0,
+                 client_regions: Optional[ClientRegions] = None) -> None:
+        super().__init__(seed, client_regions=client_regions)
         self.base_rate = float(base_rate_per_s)
         self.depth = float(diurnal_depth)
         self.spike_prob = float(spike_prob_per_min)
@@ -200,7 +255,7 @@ class MAFWorkload(Workload):
             )
             t = end
         out.sort(key=lambda r: r.arrival_s)
-        return out
+        return self._assign_regions(out)
 
 
 _WORKLOADS = {

@@ -125,6 +125,32 @@ def test_golden_byte_identical_with_explicit_roofline_source():
     assert res.pct(99) == pytest.approx(want.p99_s, abs=1e-6)
 
 
+def test_golden_token_mode_end_to_end_metrics():
+    """Token-mode golden: the same aws-1 scenario priced by the
+    continuous-batching engine (sim.replica_model: token).  Pins both the
+    classic metrics and the token-level TTFT/TPOT/goodput surface; the
+    request-level goldens above prove the opt-in changes nothing else."""
+    d = _spec("spothedge").to_dict()
+    d["serving"]["slo"] = {"ttft_s": 2.0, "tpot_s": 0.002}
+    d["sim"]["replica_model"] = "token"
+    res = Service(spec_from_dict(d)).run()
+    assert res.n_requests == 3571
+    assert res.n_completed == 3501
+    assert res.n_failed == 70
+    assert res.n_preemptions == 1
+    assert res.total_cost == pytest.approx(50.733135, abs=1e-6)
+    assert res.pct(50) == pytest.approx(0.704981, abs=1e-6)
+    assert res.pct(99) == pytest.approx(1.701918, abs=1e-6)
+    tok = res.token
+    assert tok is not None and tok.n_recorded == 3501
+    assert tok.ttft_pct(50) == pytest.approx(0.562341, abs=1e-6)
+    assert tok.ttft_pct(99) == pytest.approx(1.052005, abs=1e-6)
+    assert tok.tpot_pct(50) == pytest.approx(0.000739, abs=1e-6)
+    assert tok.n_slo_ok == 3477
+    assert tok.slo_attainment == pytest.approx(0.973677, abs=1e-6)
+    assert tok.goodput_rps == pytest.approx(0.482917, abs=1e-6)
+
+
 def test_golden_is_reproducible_within_process():
     """Two runs of the same spec are bit-identical (no hidden state)."""
     a = Service(_spec("spothedge")).run()

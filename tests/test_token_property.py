@@ -1,0 +1,39 @@
+"""Hypothesis property tests for the token engine's scheduling core.
+
+The same invariant checkers as ``tests/test_token_engine.py`` (which runs
+them on a fixed seeded sample everywhere), driven here by hypothesis
+search where the ``property`` extra is installed (CI).
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from test_token_engine import (  # noqa: E402
+    check_clock_monotone,
+    check_kv_admission_invariants,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(1, 600),        # prompt
+            st.integers(1, 400),        # output
+            st.floats(0.0, 50.0),       # enqueue gap
+        ),
+        min_size=1, max_size=30,
+    ),
+    st.integers(800, 4000),             # kv budget
+    st.integers(1, 6),                  # max batch
+)
+def test_kv_admission_invariants(reqs, budget, max_batch):
+    check_kv_admission_invariants(reqs, budget, max_batch)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(0.0, 10.0), min_size=2, max_size=20))
+def test_clock_monotone_and_bounded(gaps):
+    check_clock_monotone(gaps)

@@ -1,9 +1,10 @@
-"""Workload generators (Poisson / Arena / MAF)."""
+"""Workload generators (Poisson / Arena / MAF) + client-region mixtures."""
 
 import numpy as np
+import pytest
 
 from repro.workloads import make_workload
-from repro.workloads.arrivals import interarrival_stats
+from repro.workloads.arrivals import Request, interarrival_stats
 
 
 def test_poisson_rate():
@@ -52,3 +53,89 @@ def test_unique_ids():
     reqs = make_workload("poisson", rate_per_s=1.0, seed=5).generate(100.0)
     ids = [r.id for r in reqs]
     assert len(set(ids)) == len(ids)
+
+
+# ---------------------------------------------------------------------------
+# client-region mixtures
+# ---------------------------------------------------------------------------
+
+
+def test_default_single_region_unchanged():
+    reqs = make_workload("poisson", rate_per_s=1.0, seed=5).generate(600.0)
+    assert all(r.client_region == "us-west-2" for r in reqs)
+
+
+@pytest.mark.parametrize("kind", ["poisson", "arena", "maf"])
+def test_client_regions_mixture(kind):
+    mix = {"us-west-2": 0.5, "eu-central-1": 0.3, "ap-northeast-1": 0.2}
+    rate = {"poisson": {"rate_per_s": 1.0}}.get(
+        kind, {"base_rate_per_s": 1.0}
+    )
+    reqs = make_workload(
+        kind, seed=5, client_regions=mix, **rate
+    ).generate(3600.0)
+    seen = {r.client_region for r in reqs}
+    assert seen == set(mix)
+    # roughly proportional draws (binomial slack)
+    frac = sum(r.client_region == "us-west-2" for r in reqs) / len(reqs)
+    assert 0.4 < frac < 0.6
+
+
+def test_client_regions_do_not_perturb_arrivals():
+    """The mixture uses its own RNG stream: arrival times and token
+    lengths are bit-identical with and without it."""
+    base = make_workload("poisson", rate_per_s=1.0, seed=7).generate(3600.0)
+    mix = make_workload(
+        "poisson", rate_per_s=1.0, seed=7,
+        client_regions=["us-west-2", "eu-central-1"],
+    ).generate(3600.0)
+    assert [r.arrival_s for r in base] == [r.arrival_s for r in mix]
+    assert [r.prompt_tokens for r in base] == [r.prompt_tokens for r in mix]
+    assert [r.output_tokens for r in base] == [r.output_tokens for r in mix]
+
+
+def test_client_regions_seeded():
+    kw = dict(rate_per_s=1.0, seed=11,
+              client_regions={"us-west-2": 0.7, "us-east-1": 0.3})
+    a = make_workload("poisson", **kw).generate(1800.0)
+    b = make_workload("poisson", **kw).generate(1800.0)
+    assert [r.client_region for r in a] == [r.client_region for r in b]
+
+
+def test_client_regions_validation():
+    with pytest.raises(ValueError):
+        make_workload("poisson", client_regions={})
+    with pytest.raises(ValueError):
+        make_workload("poisson", client_regions={"": 1.0})
+    with pytest.raises(ValueError):
+        make_workload("poisson", client_regions={"us-west-2": -1.0})
+
+
+def test_client_regions_exercise_rtt_in_lb():
+    """Cross-region clients see the RTT term in their e2e latency."""
+    from repro.cluster.catalog import default_catalog, region_rtt_ms
+    from repro.cluster.instance import Instance, InstanceKind
+    from repro.configs import get_config
+    from repro.serving.latency import LatencyModel
+    from repro.serving.load_balancer import LoadBalancer
+    from repro.serving.replica import Replica
+
+    cat = default_catalog()
+    z = cat.zone("us-west-2a")
+    inst = Instance(
+        zone=z.name, region=z.region, cloud=z.cloud,
+        kind=InstanceKind.SPOT, itype="g5.48xlarge", hourly_price=4.9,
+        launched_at=0.0, cold_start_s=183.0,
+    )
+    lm = LatencyModel.for_model(
+        get_config("llama3.2-1b"), cat.instance_type("g5.48xlarge")
+    )
+    rep = Replica(inst, lm, concurrency=2)
+    far = Request(arrival_s=0.0, prompt_tokens=10, output_tokens=10,
+                  client_region="eu-central-1")
+    near = Request(arrival_s=0.0, prompt_tokens=10, output_tokens=10,
+                   client_region="us-west-2")
+    assert LoadBalancer.rtt_s(far, rep) == pytest.approx(
+        region_rtt_ms("eu-central-1", "us-west-2") / 1e3
+    )
+    assert LoadBalancer.rtt_s(far, rep) > LoadBalancer.rtt_s(near, rep)
