@@ -20,6 +20,7 @@ from benchmarks import (
     engine_bench,
     engine_speedup,
     latency,
+    migration,
     roofline,
     sensitivity,
     token_engine,
@@ -36,6 +37,7 @@ MODULES = {
     "engine_speedup": engine_speedup,  # legacy vs vector matrix timing
     "roofline": roofline,            # deliverable (g)
     "token_engine": token_engine,    # request- vs token-level replicas
+    "migration": migration,          # grace-period KV migration off/on
 }
 
 

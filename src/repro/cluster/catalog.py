@@ -228,6 +228,32 @@ def region_rtt_ms(region_a: str, region_b: str) -> float:
     return _GEO_RTT_MS[(gb, ga)]
 
 
+# Effective point-to-point bandwidth between two instances, by locality
+# tier (SpotServe §4: KV migration is bandwidth-bound).  Numbers are the
+# per-flow rates a single TCP stream sustains in practice, not NIC line
+# rate: same-zone placement gets the full intra-VPC fast path, peered
+# regions of one cloud ride the provider backbone, and anything crossing
+# a cloud boundary goes over the public internet.
+INTRA_ZONE_GBPS = 25.0
+INTRA_REGION_GBPS = 10.0
+INTER_REGION_GBPS = 5.0          # same cloud, different region
+INTER_CLOUD_GBPS = 1.0           # public internet
+
+
+def link_bandwidth_gbps(
+    cloud_a: str, region_a: str, zone_a: str,
+    cloud_b: str, region_b: str, zone_b: str,
+) -> float:
+    """Locality-tiered bandwidth (Gbit/s) between two placements."""
+    if cloud_a != cloud_b:
+        return INTER_CLOUD_GBPS
+    if region_a != region_b:
+        return INTER_REGION_GBPS
+    if zone_a != zone_b:
+        return INTRA_REGION_GBPS
+    return INTRA_ZONE_GBPS
+
+
 def _mk_zones() -> Tuple[Zone, ...]:
     """The default zone universe, mirroring the zones of the paper's traces.
 
@@ -358,6 +384,16 @@ class Catalog:
 
     def rtt_ms(self, region_a: str, region_b: str) -> float:
         return region_rtt_ms(region_a, region_b)
+
+    def bandwidth_gbps(self, zone_a: str, zone_b: str) -> float:
+        """Locality-tiered link bandwidth between two catalog zones."""
+        za, zb = self._zones[zone_a], self._zones[zone_b]
+        return link_bandwidth_gbps(
+            za.cloud, za.region, za.name, zb.cloud, zb.region, zb.name
+        )
+
+    def bandwidth_bytes_per_s(self, zone_a: str, zone_b: str) -> float:
+        return self.bandwidth_gbps(zone_a, zone_b) * 1e9 / 8.0
 
 
 def default_catalog() -> Catalog:

@@ -278,13 +278,18 @@ class ClusterSimulator:
         if not self.config.warning_enabled:
             return
         if self._warn_info is None:
-            # zone -> (warning lead, delivery prob), resolved once
+            # zone -> (warning lead, delivery prob), resolved once; a trace
+            # may carry its own observed lead, overriding the cloud default
             self._warn_info = {
                 z: (
                     max(
-                        self.catalog.cloud(
-                            self.catalog.zone(z).cloud
-                        ).preemption_warning_s,
+                        (
+                            self.trace.preemption_warning_s
+                            if self.trace.preemption_warning_s is not None
+                            else self.catalog.cloud(
+                                self.catalog.zone(z).cloud
+                            ).preemption_warning_s
+                        ),
                         self.trace.dt,
                     ),
                     self.catalog.cloud(

@@ -51,6 +51,10 @@ class SpotTrace:
     cap: np.ndarray           # int32 [T, Z]
     dt: float
     name: str = "trace"
+    # Optional override of the *cloud's* advance-preemption-warning lead
+    # time for runs replaying this trace (None -> use the cloud default).
+    # Real trace datasets sometimes come with their own observed lead.
+    preemption_warning_s: Optional[float] = None
 
     def __post_init__(self) -> None:
         self.cap = np.asarray(self.cap, dtype=np.int32)
@@ -64,6 +68,13 @@ class SpotTrace:
         self._zone_idx: Dict[str, int] = {
             z: j for j, z in enumerate(self.zones)
         }
+        if self.preemption_warning_s is not None:
+            w = float(self.preemption_warning_s)
+            if not (w >= 0.0):
+                raise ValueError(
+                    f"preemption_warning_s must be >= 0, got {w!r}"
+                )
+            self.preemption_warning_s = w
 
     def zone_index(self, zone: str) -> int:
         try:
@@ -141,6 +152,7 @@ class SpotTrace:
             cap=self.cap[:, idx].copy(),
             dt=self.dt,
             name=self.name,
+            preemption_warning_s=self.preemption_warning_s,
         )
 
     # -- (de)serialization -------------------------------------------------
@@ -151,16 +163,27 @@ class SpotTrace:
             dt=np.float64(self.dt),
             zones=np.array(self.zones, dtype=object),
             name=np.array(self.name, dtype=object),
+            # nan encodes "no override" (npz has no native None)
+            preemption_warning_s=np.float64(
+                np.nan
+                if self.preemption_warning_s is None
+                else self.preemption_warning_s
+            ),
         )
 
     @staticmethod
     def load(path: str) -> "SpotTrace":
         with np.load(path, allow_pickle=True) as f:
+            warn: Optional[float] = None
+            if "preemption_warning_s" in f:
+                w = float(f["preemption_warning_s"])
+                warn = None if np.isnan(w) else w
             return SpotTrace(
                 zones=tuple(str(z) for z in f["zones"]),
                 cap=f["cap"],
                 dt=float(f["dt"]),
                 name=str(f["name"]),
+                preemption_warning_s=warn,
             )
 
     @staticmethod
@@ -172,11 +195,13 @@ class SpotTrace:
         """
         with open(path) as f:
             d = json.load(f)
+        warn = d.get("preemption_warning_s")
         return SpotTrace(
             zones=tuple(d["zones"]),
             cap=np.asarray(d["cap"], dtype=np.int32),
             dt=float(d["dt"]),
             name=d.get("name", os.path.basename(path)),
+            preemption_warning_s=None if warn is None else float(warn),
         )
 
 

@@ -77,6 +77,14 @@ class CellResult:
     tpot_p99_s: Optional[float] = None
     goodput_rps: Optional[float] = None
     slo_attainment: Optional[float] = None
+    # grace-period migration counters (repro.migration) — token cells
+    # only; zero when the cell ran with migration disabled
+    n_drained_seqs: Optional[int] = None
+    n_migrated_seqs: Optional[int] = None
+    migrated_kv_tokens: Optional[int] = None
+    saved_prefill_tokens: Optional[int] = None
+    n_retried_requests: Optional[int] = None
+    lost_kv_tokens: Optional[int] = None
 
     @staticmethod
     def from_result(
@@ -108,6 +116,12 @@ class CellResult:
             tpot_p99_s=_finite(tok.tpot_pct(99)) if tok else None,
             goodput_rps=tok.goodput_rps if tok else None,
             slo_attainment=tok.slo_attainment if tok else None,
+            n_drained_seqs=tok.n_drained_seqs if tok else None,
+            n_migrated_seqs=tok.n_migrated_seqs if tok else None,
+            migrated_kv_tokens=tok.migrated_kv_tokens if tok else None,
+            saved_prefill_tokens=tok.saved_prefill_tokens if tok else None,
+            n_retried_requests=res.n_retried_requests if tok else None,
+            lost_kv_tokens=res.lost_kv_tokens if tok else None,
         )
 
     @property

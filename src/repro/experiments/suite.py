@@ -45,6 +45,7 @@ from repro.service.builder import build_requests, build_service
 from repro.service.loader import load_spec
 from repro.service.spec import (
     ForecastSpec,
+    MigrationSpec,
     ServiceSpec,
     SpecError,
     SweepSpec,
@@ -219,6 +220,11 @@ class ScenarioSuite:
         replica_models: Tuple[Optional[str], ...] = (
             sweep.replica_models or (None,)
         )
+        # no migration axis: the base migration section (if any) applies
+        # to every cell and no "migration" label column is emitted
+        migrations: "Tuple[bool | MigrationSpec | None, ...]" = (
+            sweep.migration or (None,)
+        )
 
         policy_labels = _disambiguate(
             [p.name for p in policies],
@@ -234,7 +240,7 @@ class ScenarioSuite:
         )
 
         scenarios: List[Scenario] = []
-        for (pol, plabel), tr, (wl, wlabel), seed, fc, rm in (
+        for (pol, plabel), tr, (wl, wlabel), seed, fc, rm, mg in (
             itertools.product(
                 zip(policies, policy_labels),
                 traces,
@@ -242,6 +248,7 @@ class ScenarioSuite:
                 seeds,
                 forecasters,
                 replica_models,
+                migrations,
             )
         ):
             if fc is not None and not getattr(
@@ -254,6 +261,13 @@ class ScenarioSuite:
                 if fc != forecasters[0]:
                     continue
                 fc = None
+            cell_rm = rm if rm is not None else base.sim.replica_model
+            if mg is not None and cell_rm != "token":
+                # migration only exists at token granularity; keep one
+                # (unlabeled-migration) cell for request-model variants
+                if mg != migrations[0]:
+                    continue
+                mg = None
             wl_seeded = (
                 wl if seed is None else dataclasses.replace(wl, seed=seed)
             )
@@ -265,16 +279,38 @@ class ScenarioSuite:
             sim = base.sim
             if rm is not None and sim.replica_model != rm:
                 sim = dataclasses.replace(sim, replica_model=rm)
+            migration = base.migration
+            mig_label: Optional[str] = None
+            if mg is not None:
+                if isinstance(mg, bool):
+                    migration = dataclasses.replace(
+                        base.migration or MigrationSpec(), enabled=mg
+                    )
+                else:
+                    migration = mg
+                mig_label = "on" if migration.enabled else "off"
+            if (
+                migration is not None
+                and migration.enabled
+                and cell_rm != "token"
+            ):
+                # an enabled base section on a request-model cell of a
+                # mixed replica_models sweep: the cell has no KV state,
+                # drop the section (the token cells keep it)
+                migration = None
             cell_spec = dataclasses.replace(
                 base,
                 name=(f"{base.name}-{plabel}-{tr}-{wlabel}"
                       f"-s{wl_seeded.seed}"
                       + (f"-{fc}" if fc is not None else "")
-                      + (f"-{rm}" if rm is not None else "")),
+                      + (f"-{rm}" if rm is not None else "")
+                      + (f"-mig_{mig_label}" if mig_label is not None
+                         else "")),
                 replica_policy=pol,
                 trace=tr,
                 workload=wl_seeded,
                 forecast=forecast,
+                migration=migration,
                 sim=sim,
                 sweep=None,
             )
@@ -288,6 +324,8 @@ class ScenarioSuite:
                 labels["forecaster"] = fc
             if rm is not None:
                 labels["replica_model"] = rm
+            if mig_label is not None:
+                labels["migration"] = mig_label
             scenarios.append(
                 Scenario(
                     labels=labels,

@@ -1,0 +1,65 @@
+"""Grace-period KV migration & elastic re-shard on preemption.
+
+SpotServe (arxiv 2311.15566) observes that a spot preemption does not
+have to destroy serving state: clouds deliver a 30–120 s warning
+(``CloudSpec.preemption_warning_s``), and within that window an engine
+can *drain* short sequences, *migrate* resident KV cache to a surviving
+replica over the inter-zone network, or *re-shard* onto fewer chips —
+killing and re-prefilling from scratch is the worst case, not the only
+case.
+
+This package is the planner + cost model for that decision, shared by
+both serving engines so their migration behavior is decision-identical:
+
+* :mod:`~repro.migration.config` — :class:`MigrationSpec`, the
+  spec-visible knobs (stdlib-only; importable from the serving layer);
+* :mod:`~repro.migration.cost` — KV transfer bytes/seconds (int8
+  compression optionally halves bytes, reusing the quantization scheme
+  of ``distributed/compression.py``) and SpotServe-style elastic
+  re-shard pricing against ``distributed/elastic.RemeshPlan``;
+* :mod:`~repro.migration.planner` — the pure drain/migrate/kill
+  decision procedure over a snapshot of batch state;
+* :mod:`~repro.migration.runtime` — :class:`MigrationRuntime`, the
+  engine-facing executor that snapshots a dying
+  :class:`~repro.serving.token.batch.ContinuousBatch`, plans, injects
+  migrated sequences into target batches and returns the residual
+  :class:`~repro.serving.token.batch.KillReport`.
+"""
+
+from repro.migration.config import MigrationSpec
+from repro.migration.cost import (
+    INT8_KV_FACTOR,
+    ReshardCost,
+    compression_factor,
+    kv_transfer_bytes,
+    kv_transfer_s,
+    plan_reshard,
+)
+from repro.migration.planner import (
+    SeqDecision,
+    SeqState,
+    TargetInfo,
+    plan_preemption,
+)
+from repro.migration.runtime import (
+    MigratedSeq,
+    MigrationRuntime,
+    PreemptionOutcome,
+)
+
+__all__ = [
+    "MigrationSpec",
+    "INT8_KV_FACTOR",
+    "ReshardCost",
+    "compression_factor",
+    "kv_transfer_bytes",
+    "kv_transfer_s",
+    "plan_reshard",
+    "SeqDecision",
+    "SeqState",
+    "TargetInfo",
+    "plan_preemption",
+    "MigratedSeq",
+    "MigrationRuntime",
+    "PreemptionOutcome",
+]

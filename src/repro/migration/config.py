@@ -1,0 +1,77 @@
+"""MigrationSpec: spec-visible knobs of the KV-migration subsystem.
+
+Kept stdlib-only (no numpy, no service-layer imports) so both serving
+engines and the service spec can import it without layering violations:
+``repro.serving`` must never import ``repro.service``, yet both need the
+same frozen knob set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+__all__ = ["MigrationSpec", "COMPRESSION_MODES"]
+
+COMPRESSION_MODES = ("none", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationSpec:
+    """Knobs of the grace-period drain/migrate/kill planner.
+
+    ``enabled: False`` (the default) is the status quo: preemptions call
+    ``kill()`` and every in-flight request re-prefills elsewhere.  All
+    other knobs are inert until enabled.
+    """
+
+    enabled: bool = False
+    # flat override of the catalog's locality-tiered bandwidth (Gbit/s);
+    # None means use the inter-zone table on the catalog
+    bandwidth_gbps: Optional[float] = None
+    compression: str = "none"          # "none" | "int8" (halves KV bytes)
+    # sequences whose remaining work fits this budget (and the grace
+    # window) finish in place instead of moving
+    drain_threshold_s: float = 30.0
+    # sequences with fewer resident KV tokens than this re-prefill
+    # (moving a near-empty cache is not worth the setup cost)
+    migrate_threshold_tokens: int = 1
+    # per-transfer connection setup / control-plane latency
+    link_latency_s: float = 0.05
+
+    def __post_init__(self) -> None:
+        if self.compression not in COMPRESSION_MODES:
+            raise ValueError(
+                f"migration.compression must be one of {COMPRESSION_MODES},"
+                f" got {self.compression!r}"
+            )
+        if self.bandwidth_gbps is not None and self.bandwidth_gbps <= 0:
+            raise ValueError(
+                f"migration.bandwidth_gbps must be positive, "
+                f"got {self.bandwidth_gbps}"
+            )
+        if self.drain_threshold_s < 0:
+            raise ValueError(
+                f"migration.drain_threshold_s must be >= 0, "
+                f"got {self.drain_threshold_s}"
+            )
+        if self.migrate_threshold_tokens < 0:
+            raise ValueError(
+                f"migration.migrate_threshold_tokens must be >= 0, "
+                f"got {self.migrate_threshold_tokens}"
+            )
+        if self.link_latency_s < 0:
+            raise ValueError(
+                f"migration.link_latency_s must be >= 0, "
+                f"got {self.link_latency_s}"
+            )
+
+    def to_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {"enabled": self.enabled}
+        if self.bandwidth_gbps is not None:
+            out["bandwidth_gbps"] = self.bandwidth_gbps
+        out["compression"] = self.compression
+        out["drain_threshold_s"] = self.drain_threshold_s
+        out["migrate_threshold_tokens"] = self.migrate_threshold_tokens
+        out["link_latency_s"] = self.link_latency_s
+        return out

@@ -1,0 +1,127 @@
+"""The drain/migrate/kill decision procedure.
+
+Pure and deterministic: a snapshot of the dying batch's per-sequence
+state plus a snapshot of the surviving targets' KV headroom in, a
+decision per sequence out.  Both serving engines call this exact
+function with identically-constructed inputs, which is what makes their
+migration behavior decision-identical (enforced by the differential
+test suite).
+
+Per sequence, in descending resident-KV order (largest caches are the
+most expensive to lose; ties by ascending key for determinism):
+
+* **drain** — the remaining work (``(prompt-prefilled)·prefill_s +
+  (out-decoded)·weight_read_s``) fits both ``drain_threshold_s`` and the
+  grace window: finish in place, ship nothing.
+* **migrate** — resident KV meets ``migrate_threshold_tokens``, some
+  target has KV-budget headroom for the sequence's full ``prompt+out``
+  reservation, and the cumulative transfer time (transfers serialize on
+  the dying instance's NIC) still fits the grace window: ship
+  ``resident × kv_bytes_per_token`` (× 0.5 under int8) and resume on
+  the target after the transfer delay.
+* **kill** — everything else: re-prefill elsewhere, the status quo.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.migration.config import MigrationSpec
+from repro.migration.cost import kv_transfer_bytes, kv_transfer_s
+
+__all__ = ["SeqState", "TargetInfo", "SeqDecision", "plan_preemption"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqState:
+    """Snapshot of one in-flight sequence on the dying batch."""
+
+    key: int
+    prompt_tokens: int
+    output_tokens: int
+    prefilled: int                  # prompt tokens prefilled so far
+    decoded: int                    # output tokens produced so far
+    arrival_s: float
+    enqueued_s: float
+    first_s: float                  # engine-clock first token (nan: none)
+
+    @property
+    def resident_tokens(self) -> int:
+        return self.prefilled + self.decoded
+
+
+@dataclasses.dataclass
+class TargetInfo:
+    """A surviving replica's capacity to receive migrations (mutable:
+    headroom is decremented as the planner assigns sequences)."""
+
+    rid: int
+    headroom_tokens: int            # kv_budget - committed tokens
+    bandwidth_bytes_per_s: float    # link from the dying instance
+
+
+@dataclasses.dataclass(frozen=True)
+class SeqDecision:
+    state: SeqState
+    action: str                     # "drain" | "migrate" | "kill"
+    target_rid: Optional[int] = None
+    transfer_s: float = 0.0         # this sequence's own wire time
+    resume_offset_s: float = 0.0    # cumulative delay until it resumes
+
+
+def plan_preemption(
+    states: Sequence[SeqState],
+    targets: Sequence[TargetInfo],
+    grace_s: float,
+    engine_cfg,                     # TokenEngineConfig (duck-typed)
+    spec: MigrationSpec,
+) -> List[SeqDecision]:
+    """Decide drain/migrate/kill for every sequence on a dying batch."""
+    order = sorted(
+        states, key=lambda s: (-s.resident_tokens, s.arrival_s, s.key)
+    )
+    drain_cap = min(spec.drain_threshold_s, grace_s)
+    pf = engine_cfg.prefill_s_per_token
+    w = engine_cfg.weight_read_s
+    cum = 0.0                       # transfers serialize on the src NIC
+    out: List[SeqDecision] = []
+    for s in order:
+        remaining_s = (
+            (s.prompt_tokens - s.prefilled) * pf
+            + (s.output_tokens - s.decoded) * w
+        )
+        if remaining_s <= drain_cap:
+            out.append(SeqDecision(s, "drain"))
+            continue
+        decision: Optional[SeqDecision] = None
+        resident = s.resident_tokens
+        if resident >= spec.migrate_threshold_tokens:
+            nbytes = kv_transfer_bytes(
+                resident, engine_cfg.kv_bytes_per_token, spec.compression
+            )
+            need = s.prompt_tokens + s.output_tokens
+            best = None             # (sort_key, target, transfer_s)
+            for t in targets:
+                if t.headroom_tokens < need:
+                    continue
+                tr = kv_transfer_s(
+                    nbytes, t.bandwidth_bytes_per_s, spec.link_latency_s
+                )
+                if cum + tr > grace_s:
+                    continue
+                rank = (-t.bandwidth_bytes_per_s, -t.headroom_tokens, t.rid)
+                if best is None or rank < best[0]:
+                    best = (rank, t, tr)
+            if best is not None:
+                _, tgt, tr = best
+                cum += tr
+                tgt.headroom_tokens -= need
+                decision = SeqDecision(
+                    s, "migrate",
+                    target_rid=tgt.rid,
+                    transfer_s=tr,
+                    resume_offset_s=cum,
+                )
+        out.append(decision or SeqDecision(s, "kill"))
+    return out

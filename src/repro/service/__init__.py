@@ -29,6 +29,7 @@ from repro.service.spec import (
     AutoscalerSpec,
     ForecastSpec,
     LatencySpec,
+    MigrationSpec,
     PlacementFilter,
     ReplicaPolicySpec,
     ResourceSpec,
@@ -45,6 +46,7 @@ __all__ = [
     "AutoscalerSpec",
     "ForecastSpec",
     "LatencySpec",
+    "MigrationSpec",
     "PlacementFilter",
     "ReplicaPolicySpec",
     "ResolvedService",

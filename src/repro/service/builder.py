@@ -178,6 +178,12 @@ def build_service(
     zones = resolve_zones(spec.resources, trace, catalog)
     if tuple(zones) != tuple(trace.zones):
         trace = trace.slice_zones(zones)
+    if spec.sim.preemption_warning_s is not None:
+        # copy — named traces are process-global cached and must never
+        # be mutated in place
+        trace = dataclasses.replace(
+            trace, preemption_warning_s=spec.sim.preemption_warning_s
+        )
 
     policy = _build_policy(spec, trace, catalog)
     autoscaler = _build_autoscaler(spec)
@@ -205,6 +211,11 @@ def build_service(
         profile=spec.latency.profile,
     )
     serving = spec.serving
+    # migration only exists at token granularity; request-model cells of
+    # a mixed replica_models sweep run without it (the status quo)
+    migration = (
+        spec.migration if sim_spec.replica_model == "token" else None
+    )
     token_knobs = None
     if sim_spec.replica_model == "token":
         token_knobs = TokenSchedulerConfig(
@@ -241,6 +252,7 @@ def build_service(
         latency_model=latency_model,
         replica_model=sim_spec.replica_model,
         token_scheduler=token_knobs,
+        migration=migration,
     )
     return ResolvedService(
         spec=spec,

@@ -19,6 +19,7 @@ from repro.service.spec import (
     AutoscalerSpec,
     ForecastSpec,
     LatencySpec,
+    MigrationSpec,
     PlacementFilter,
     ReplicaPolicySpec,
     ResourceSpec,
@@ -132,10 +133,34 @@ def _sweep_workload(entry: Any) -> WorkloadSpec:
     )
 
 
+def _migration_from_dict(d: Mapping[str, Any], where: str) -> MigrationSpec:
+    """Build a MigrationSpec section; its own ValueErrors (bad compression
+    mode, negative thresholds) surface as SpecErrors naming the section."""
+    kw = _pick(d, MigrationSpec, where)
+    try:
+        return MigrationSpec(**kw)
+    except SpecError:
+        raise
+    except ValueError as e:
+        raise SpecError(f"{where}: {e}") from e
+
+
+def _sweep_migration(entry: Any) -> "bool | MigrationSpec":
+    """A sweep migration entry is a bool toggle or a full mapping."""
+    if isinstance(entry, bool):
+        return entry
+    if isinstance(entry, Mapping):
+        return _migration_from_dict(entry, "sweep.migration entry")
+    raise SpecError(
+        f"sweep.migration entries must be booleans or migration "
+        f"mappings, got {entry!r}"
+    )
+
+
 def _sweep_from_dict(d: Mapping[str, Any]) -> SweepSpec:
     keys = (
         "policies", "traces", "workloads", "seeds", "forecasters",
-        "replica_models",
+        "replica_models", "migration",
     )
     _check_keys(d, keys, "sweep")
     for key in keys:
@@ -168,6 +193,9 @@ def _sweep_from_dict(d: Mapping[str, Any]) -> SweepSpec:
         seeds=tuple(d.get("seeds", ())),
         forecasters=forecasters,
         replica_models=replica_models,
+        migration=tuple(
+            _sweep_migration(e) for e in d.get("migration", ())
+        ),
     )
 
 
@@ -206,7 +234,7 @@ def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
         d,
         ("name", "model", "trace", "resources", "replica_policy",
          "autoscaler", "workload", "latency", "forecast", "serving",
-         "sim", "load_balancer", "sweep"),
+         "migration", "sim", "load_balancer", "sweep"),
         "service spec",
     )
     try:
@@ -235,6 +263,10 @@ def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
         kw["serving"], serving_rm = _serving_from_dict(
             _section(d, "serving")
         )
+        if d.get("migration") is not None:
+            kw["migration"] = _migration_from_dict(
+                _section(d, "migration"), "migration"
+            )
         sim_kw = _pick(_section(d, "sim"), SimSpec, "sim")
         if serving_rm is not None:
             # serving.replica_model is YAML sugar for sim.replica_model;

@@ -35,7 +35,9 @@ checks (is the policy registered? does the trace exist?) live in
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Mapping, Optional, Tuple
+from typing import Any, Dict, Mapping, Optional, Tuple, Union
+
+from repro.migration.config import MigrationSpec
 
 __all__ = [
     "SpecError",
@@ -48,6 +50,7 @@ __all__ = [
     "ForecastSpec",
     "SLOSpec",
     "ServingSpec",
+    "MigrationSpec",
     "SimSpec",
     "SweepSpec",
     "ServiceSpec",
@@ -556,6 +559,9 @@ class SimSpec:
     drain_s: float = 600.0        # stop generating arrivals this long
     # before the horizon so in-flight work can finish
     warning_enabled: bool = True
+    # override the cloud's advance-warning lead time (s) for this run's
+    # trace (None -> the catalog per-cloud default: 120 s AWS, 30 s GCP)
+    preemption_warning_s: Optional[float] = None
     seed: int = 0
     record_series: bool = True
     engine: str = "vector"
@@ -606,6 +612,12 @@ class SimSpec:
                 self.concurrency > 0,
                 f"sim.concurrency must be positive, got {self.concurrency}",
             )
+        if self.preemption_warning_s is not None:
+            _require(
+                self.preemption_warning_s >= 0,
+                f"sim.preemption_warning_s must be >= 0, "
+                f"got {self.preemption_warning_s}",
+            )
 
     @property
     def duration_s(self) -> float:
@@ -651,8 +663,18 @@ class SweepSpec:
     seeds: Tuple[int, ...] = ()
     forecasters: Tuple[str, ...] = ()
     replica_models: Tuple[str, ...] = ()
+    # migration axis: each entry is a bool (toggle the base spec's
+    # migration section on/off) or a full MigrationSpec override — the
+    # A/B axis behind benchmarks/migration.py
+    migration: Tuple[Union[bool, MigrationSpec], ...] = ()
 
     def __post_init__(self) -> None:
+        for m in self.migration:
+            _require(
+                isinstance(m, (bool, MigrationSpec)),
+                "sweep.migration entries must be booleans or migration "
+                f"mappings, got {m!r}",
+            )
         for tr in self.traces:
             _require(
                 bool(tr), "sweep.traces entries must be non-empty strings"
@@ -687,6 +709,7 @@ class SweepSpec:
             * max(len(self.seeds), 1)
             * max(len(self.forecasters), 1)
             * max(len(self.replica_models), 1)
+            * max(len(self.migration), 1)
         )
 
     def to_dict(self) -> Dict[str, Any]:
@@ -703,6 +726,11 @@ class SweepSpec:
             out["forecasters"] = list(self.forecasters)
         if self.replica_models:
             out["replica_models"] = list(self.replica_models)
+        if self.migration:
+            out["migration"] = [
+                m if isinstance(m, bool) else m.to_dict()
+                for m in self.migration
+            ]
         return out
 
 
@@ -732,6 +760,7 @@ class ServiceSpec:
     latency: LatencySpec = dataclasses.field(default_factory=LatencySpec)
     forecast: Optional[ForecastSpec] = None
     serving: ServingSpec = dataclasses.field(default_factory=ServingSpec)
+    migration: Optional[MigrationSpec] = None
     sim: SimSpec = dataclasses.field(default_factory=SimSpec)
     load_balancer: str = "least_loaded"
     sweep: Optional[SweepSpec] = None
@@ -745,6 +774,18 @@ class ServiceSpec:
             f"service.load_balancer must be one of {list(LB_NAMES)}, "
             f"got {self.load_balancer!r}",
         )
+        if self.migration is not None and self.migration.enabled:
+            token_ok = self.sim.replica_model == "token" or (
+                self.sweep is not None
+                and "token" in self.sweep.replica_models
+            )
+            _require(
+                token_ok,
+                "migration.enabled requires the token-level engine: set "
+                "sim.replica_model: token (or sweep over replica_models "
+                "including 'token') — the request-level model has no KV "
+                "state to migrate",
+            )
 
     # -- cross-registry validation (deferred imports keep this cheap) -----
     def validate(self) -> "ServiceSpec":
@@ -829,6 +870,8 @@ class ServiceSpec:
         }
         if self.forecast is not None:
             out["forecast"] = self.forecast.to_dict()
+        if self.migration is not None:
+            out["migration"] = self.migration.to_dict()
         if self.sweep is not None:
             out["sweep"] = self.sweep.to_dict()
         return out

@@ -45,12 +45,15 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.cluster.catalog import Catalog, default_catalog, region_rtt_ms
-from repro.cluster.instance import Instance
+from repro.cluster.instance import Instance, InstanceState
+from repro.migration.config import MigrationSpec
+from repro.migration.runtime import MigrationRuntime
 from repro.cluster.simulator import ClusterSimulator, SimConfig
 from repro.cluster.traces import SpotTrace
 from repro.core.autoscaler import Autoscaler, ConstantTarget
@@ -127,6 +130,7 @@ class VectorizedServingEngine:
         latency_model: Optional[LatencyModel] = None,
         replica_model: str = "request",
         token_scheduler: Optional[TokenSchedulerConfig] = None,
+        migration: Optional[MigrationSpec] = None,
     ) -> None:
         self.catalog = catalog or default_catalog()
         self.cfg = cfg
@@ -163,6 +167,24 @@ class VectorizedServingEngine:
         self._n_killed_queued = 0
         self._lost_prefill_tokens = 0
         self._lost_decode_tokens = 0
+        self._n_retried = 0
+        if migration is not None and migration.enabled \
+                and self._token_cfg is None:
+            raise ValueError(
+                "migration.enabled requires replica_model='token'"
+            )
+        self._mig_rt: Optional[MigrationRuntime] = (
+            MigrationRuntime(migration, self._token_cfg)
+            if migration is not None and migration.enabled
+            and self._token_cfg is not None else None
+        )
+        self._n_drained = 0
+        self._n_migrated = 0
+        self._migrated_kv_tokens = 0
+        self._saved_prefill_tokens = 0
+        self._saved_decode_tokens = 0
+        self._migration_transfer_s = 0.0
+        self._recompute_saved_s = 0.0
 
         lb = lb or LeastLoadedBalancer()
         # exact types only: a subclass may override pick(), and silently
@@ -283,16 +305,26 @@ class VectorizedServingEngine:
         self._by_id[inst.id] = rep
         return rep
 
-    def _kill(self, rep: _Rep) -> None:
+    def _kill(self, rep: _Rep, now: Optional[float] = None) -> None:
         """Preemption/termination: in-flight then queued back to pending."""
         if rep.dead:
             return
         if rep.batch is not None:
             # token mode: the whole batch loses its KV state; every
-            # request (in-flight and queued) retries client-side
+            # request (in-flight and queued) retries client-side —
+            # unless migration is on and the preemption was warned
             rep.dead = True
             self._live_dirty = True
-            kr = rep.batch.kill()
+            inst = rep.inst
+            if (
+                self._mig_rt is not None
+                and now is not None
+                and inst.state is InstanceState.PREEMPTED
+                and inst.warned_at is not None
+            ):
+                kr = self._kill_with_migration(rep, now)
+            else:
+                kr = rep.batch.kill()
             arr = self._arr_l
             pending = self._pending
             pmin = self._pmin
@@ -301,6 +333,7 @@ class VectorizedServingEngine:
                 if arr[i] < pmin:
                     pmin = arr[i]
             self._pmin = pmin
+            self._n_retried += len(kr.keys)
             self._busy.discard(rep.slot)
             self._n_kv_preempted += kr.n_batch
             self._n_killed_queued += kr.n_queued
@@ -321,16 +354,77 @@ class VectorizedServingEngine:
             if arr[i] < pmin:
                 pmin = arr[i]
         self._pmin = pmin
+        self._n_retried += len(rep.running) + len(rep.queue)
         self._qn -= len(rep.queue)
         rep.running = []
         rep.queue = []
         rep.qage = []
         rep.qmin = _INF
 
+    def _kill_with_migration(self, rep: _Rep, now: float):
+        """Warned preemption with migration on: drain/migrate/kill the
+        dying batch (decision-identical to the legacy simulator's path).
+        Returns the residual KillReport."""
+        inst = rep.inst
+        grace = now - inst.warned_at
+        cands = sorted(
+            (
+                r for r in self._live
+                if r is not rep and not r.dead
+                and r.batch is not None and r.inst.is_ready()
+            ),
+            key=lambda r: r.rid,
+        )
+        outcome = self._mig_rt.execute_preemption(
+            rep.batch, inst,
+            [(r.rid, r.batch, r.inst) for r in cands],
+            now, grace,
+        )
+        cfg = self._token_cfg
+        finish = now + cfg.overhead_s
+        rcode = self._rcode_l
+        arr = self._arr_l
+        records = self._token_records
+        for s in outcome.drained:
+            # finished decoding inside the grace window: completes at
+            # the kill instant, first token (if any) already emitted
+            i = s.key
+            rtt = rep.rtt[rcode[i]]
+            e2e = finish - arr[i] + rtt
+            if e2e > self.timeout_s:
+                self.failed += 1
+            else:
+                self.latencies.append(e2e)
+                self.completed += 1
+                first = (
+                    s.first_s + cfg.overhead_s
+                    if math.isfinite(s.first_s) else finish
+                )
+                records.append(TokenRecord(
+                    req_id=i,
+                    arrival_s=arr[i],
+                    first_token_s=first,
+                    finish_s=finish,
+                    output_tokens=s.output_tokens,
+                    rtt_s=rtt,
+                ))
+        by_rid = {r.rid: r for r in cands}
+        for m in outcome.migrated:
+            # the target batch has queued work now; make sure it steps
+            self._busy.add(by_rid[m.target_rid].slot)
+        self._n_drained += outcome.n_drained
+        self._n_migrated += outcome.n_migrated
+        self._migrated_kv_tokens += outcome.migrated_kv_tokens
+        self._saved_prefill_tokens += outcome.saved_prefill_tokens
+        self._saved_decode_tokens += outcome.saved_decode_tokens
+        self._migration_transfer_s += outcome.transfer_s_total
+        self._recompute_saved_s += outcome.recompute_saved_s
+        return outcome.kill_report
+
     def _on_dead(self, inst: Instance, now: float) -> None:
         rep = self._by_id.get(inst.id)
         if rep is not None:
-            self._kill(rep)
+            self._kill(rep, now)
 
     def _sync(self) -> None:
         """Reconcile the replica set with the cluster's active instances.
@@ -840,6 +934,13 @@ class VectorizedServingEngine:
                 n_killed_queued=self._n_killed_queued,
                 lost_prefill_tokens=self._lost_prefill_tokens,
                 lost_decode_tokens=self._lost_decode_tokens,
+                n_drained_seqs=self._n_drained,
+                n_migrated_seqs=self._n_migrated,
+                migrated_kv_tokens=self._migrated_kv_tokens,
+                saved_prefill_tokens=self._saved_prefill_tokens,
+                saved_decode_tokens=self._saved_decode_tokens,
+                migration_transfer_s=self._migration_transfer_s,
+                recompute_saved_s=self._recompute_saved_s,
             )
         return ServingResult(
             policy=self.cluster.policy.name,
@@ -857,4 +958,8 @@ class VectorizedServingEngine:
             n_preemptions=base.n_preemptions,
             n_launch_failures=base.n_launch_failures,
             token=token_stats,
+            n_retried_requests=self._n_retried,
+            lost_kv_tokens=(
+                self._lost_prefill_tokens + self._lost_decode_tokens
+            ),
         )

@@ -24,12 +24,15 @@ Mechanics:
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.cluster.catalog import Catalog, default_catalog
-from repro.cluster.instance import Instance
+from repro.cluster.instance import Instance, InstanceState
+from repro.migration.config import MigrationSpec
+from repro.migration.runtime import MigrationRuntime
 from repro.cluster.simulator import ClusterSimulator, SimConfig
 from repro.cluster.traces import SpotTrace
 from repro.core.autoscaler import Autoscaler, ConstantTarget
@@ -67,6 +70,11 @@ class ServingResult:
     n_launch_failures: int = 0
     # token-level metrics (replica_model="token" runs only)
     token: Optional[TokenStats] = None
+    # uniform kill accounting across replica models (both engines):
+    # requests pushed back to the client for retry after a replica died,
+    # and KV tokens destroyed doing so (always 0 in request mode)
+    n_retried_requests: int = 0
+    lost_kv_tokens: int = 0
 
     @property
     def failure_rate(self) -> float:
@@ -114,6 +122,7 @@ class ServingSimulator:
         latency_model: Optional[LatencyModel] = None,
         replica_model: str = "request",
         token_scheduler: Optional[TokenSchedulerConfig] = None,
+        migration: Optional[MigrationSpec] = None,
     ) -> None:
         self.catalog = catalog or default_catalog()
         self.cfg = cfg
@@ -149,6 +158,24 @@ class ServingSimulator:
         self._n_killed_queued = 0
         self._lost_prefill_tokens = 0
         self._lost_decode_tokens = 0
+        self._n_retried = 0
+        if migration is not None and migration.enabled \
+                and self._token_cfg is None:
+            raise ValueError(
+                "migration.enabled requires replica_model='token'"
+            )
+        self._mig_rt: Optional[MigrationRuntime] = (
+            MigrationRuntime(migration, self._token_cfg)
+            if migration is not None and migration.enabled
+            and self._token_cfg is not None else None
+        )
+        self._n_drained = 0
+        self._n_migrated = 0
+        self._migrated_kv_tokens = 0
+        self._saved_prefill_tokens = 0
+        self._saved_decode_tokens = 0
+        self._migration_transfer_s = 0.0
+        self._recompute_saved_s = 0.0
 
         self.requests = sorted(requests, key=lambda r: r.arrival_s)
         self._next_arrival = 0
@@ -206,7 +233,17 @@ class ServingSimulator:
         rep = self.replicas.get(rid)
         if rep is None or rep.state is ReplicaState.DEAD:
             return
-        for req in rep.kill():
+        if (
+            self._mig_rt is not None
+            and isinstance(rep, TokenReplica)
+            and rep.instance.state is InstanceState.PREEMPTED
+            and rep.instance.warned_at is not None
+        ):
+            self._kill_with_migration(rep, now)
+            return
+        killed = rep.kill()
+        self._n_retried += len(killed)
+        for req in killed:
             # client retry: back into the pending pool
             self.pending.append(req)
         if isinstance(rep, TokenReplica) and rep.kill_report is not None:
@@ -215,6 +252,64 @@ class ServingSimulator:
             self._n_killed_queued += kr.n_queued
             self._lost_prefill_tokens += kr.lost_prefill_tokens
             self._lost_decode_tokens += kr.lost_decode_tokens
+
+    def _kill_with_migration(self, rep: TokenReplica, now: float) -> None:
+        """Warned preemption with migration on: drain/migrate/kill the
+        dying batch instead of re-prefilling everything elsewhere."""
+        inst = rep.instance
+        grace = now - inst.warned_at
+        targets = sorted(
+            (
+                rp for rp in self.replicas.values()
+                if rp is not rep
+                and isinstance(rp, TokenReplica)
+                and rp.state is not ReplicaState.DEAD
+                and rp.instance.is_ready()
+            ),
+            key=lambda rp: rp.instance.id,
+        )
+        outcome, drained, failed = rep.kill_migrating(
+            self._mig_rt, targets, now, grace
+        )
+        cfg = self._token_cfg
+        finish = now + cfg.overhead_s
+        for req, s in drained:
+            # finished decoding inside the grace window: completes at
+            # the kill instant, first token (if any) already emitted
+            rtt = LoadBalancer.rtt_s(req, rep)
+            e2e = finish - self._arrival[req.id] + rtt
+            if e2e > self.timeout_s:
+                self.failed += 1
+            else:
+                self.latencies.append(e2e)
+                self.completed += 1
+                first = (
+                    s.first_s + cfg.overhead_s
+                    if math.isfinite(s.first_s) else finish
+                )
+                self._token_records.append(TokenRecord(
+                    req_id=req.id,
+                    arrival_s=self._arrival[req.id],
+                    first_token_s=first,
+                    finish_s=finish,
+                    output_tokens=s.output_tokens,
+                    rtt_s=rtt,
+                ))
+        self._n_retried += len(failed)
+        for req in failed:
+            self.pending.append(req)
+        kr = outcome.kill_report
+        self._n_kv_preempted += kr.n_batch
+        self._n_killed_queued += kr.n_queued
+        self._lost_prefill_tokens += kr.lost_prefill_tokens
+        self._lost_decode_tokens += kr.lost_decode_tokens
+        self._n_drained += outcome.n_drained
+        self._n_migrated += outcome.n_migrated
+        self._migrated_kv_tokens += outcome.migrated_kv_tokens
+        self._saved_prefill_tokens += outcome.saved_prefill_tokens
+        self._saved_decode_tokens += outcome.saved_decode_tokens
+        self._migration_transfer_s += outcome.transfer_s_total
+        self._recompute_saved_s += outcome.recompute_saved_s
 
     def _on_dead(self, inst: Instance, now: float) -> None:
         self._kill_replica(inst.id, now)
@@ -307,6 +402,13 @@ class ServingSimulator:
                 n_killed_queued=self._n_killed_queued,
                 lost_prefill_tokens=self._lost_prefill_tokens,
                 lost_decode_tokens=self._lost_decode_tokens,
+                n_drained_seqs=self._n_drained,
+                n_migrated_seqs=self._n_migrated,
+                migrated_kv_tokens=self._migrated_kv_tokens,
+                saved_prefill_tokens=self._saved_prefill_tokens,
+                saved_decode_tokens=self._saved_decode_tokens,
+                migration_transfer_s=self._migration_transfer_s,
+                recompute_saved_s=self._recompute_saved_s,
             )
         return ServingResult(
             policy=self.cluster.policy.name,
@@ -324,4 +426,8 @@ class ServingSimulator:
             n_preemptions=base.n_preemptions,
             n_launch_failures=base.n_launch_failures,
             token=token_stats,
+            n_retried_requests=self._n_retried,
+            lost_kv_tokens=(
+                self._lost_prefill_tokens + self._lost_decode_tokens
+            ),
         )

@@ -35,7 +35,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from collections import deque
-from typing import Deque, List, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -84,7 +84,7 @@ class ContinuousBatch:
     __slots__ = (
         "cfg", "now", "queue", "reserved_tokens", "completed",
         "_keys", "_prompt", "_out", "_pref", "_dec",
-        "_arrival", "_enq", "_first",
+        "_arrival", "_enq", "_first", "_mig",
     )
 
     def __init__(self, cfg: TokenEngineConfig) -> None:
@@ -102,6 +102,9 @@ class ContinuousBatch:
         self._arrival = _EMPTY_F
         self._enq = _EMPTY_F
         self._first = _EMPTY_F          # first-token time (engine clock)
+        # migrated-in progress awaiting admission: key -> (pref, dec,
+        # first).  None (not {}) when migration is off: zero overhead.
+        self._mig: Optional[Dict[int, Tuple[int, int, float]]] = None
 
     # -- introspection --------------------------------------------------
     @property
@@ -120,6 +123,28 @@ class ContinuousBatch:
     def kv_tokens(self) -> int:
         """Resident KV tokens right now (prefilled + decoded)."""
         return int(self._pref.sum() + self._dec.sum())
+
+    @property
+    def committed_tokens(self) -> int:
+        """KV tokens spoken for: active reservations plus what the
+        admission queue will claim — a migration target's used budget."""
+        return self.reserved_tokens + sum(
+            p + o for _, p, o, _, _ in self.queue
+        )
+
+    def iter_states(self) -> List[
+        Tuple[int, int, int, int, int, float, float, float]
+    ]:
+        """Snapshot of in-batch sequences for the migration planner:
+        ``(key, prompt, out, prefilled, decoded, arrival_s, enqueued_s,
+        first_s)`` per sequence (``first_s`` is nan before any token)."""
+        return [
+            (int(self._keys[j]), int(self._prompt[j]), int(self._out[j]),
+             int(self._pref[j]), int(self._dec[j]),
+             float(self._arrival[j]), float(self._enq[j]),
+             float(self._first[j]))
+            for j in range(len(self._keys))
+        ]
 
     def backlog_hint_s(self) -> float:
         """Rough seconds of work ahead of a new arrival (LB estimates)."""
@@ -149,6 +174,30 @@ class ContinuousBatch:
         self.queue.append((key, p, o, float(arrival_s), float(enqueued_s)))
         return True
 
+    def enqueue_migrated(
+        self, key: int, prompt_tokens: int, output_tokens: int,
+        arrival_s: float, enqueued_s: float,
+        prefilled: int, decoded: int, first_s: float,
+    ) -> bool:
+        """Queue a migrated-in sequence.  Its KV cache (``prefilled +
+        decoded`` tokens) survived the move, so admission seeds progress
+        instead of starting from zero; ``enqueued_s`` is the
+        transfer-complete time (the sequence joins at a boundary after
+        it), and ``first_s`` preserves an already-emitted first token."""
+        p = max(1, int(prompt_tokens))
+        o = max(1, int(output_tokens))
+        if p + o > self.cfg.kv_budget_tokens:
+            return False
+        if self._mig is None:
+            self._mig = {}
+        self._mig[int(key)] = (
+            int(prefilled), int(decoded), float(first_s)
+        )
+        self.queue.append(
+            (int(key), p, o, float(arrival_s), float(enqueued_s))
+        )
+        return True
+
     def expire_queue(self, t: float, timeout_s: float) -> List[int]:
         """Drop admission-queue entries whose client gave up (wall-clock
         ``t`` is past ``arrival + timeout``).  Returns their keys."""
@@ -163,21 +212,60 @@ class ContinuousBatch:
                 kept.append(entry)
         if expired:
             self.queue = kept
+            if self._mig:
+                for k in expired:
+                    self._mig.pop(k, None)
         return expired
+
+    def remove(self, keys: Sequence[int]) -> None:
+        """Drop sequences from the batch without completing or counting
+        them (they drained or migrated; the migration runtime owns their
+        accounting).  Frees their KV reservation."""
+        if len(self._keys) == 0 or not keys:
+            return
+        kset = {int(k) for k in keys}
+        mask = np.fromiter(
+            (int(k) in kset for k in self._keys), dtype=bool,
+            count=len(self._keys),
+        )
+        if not mask.any():
+            return
+        idx = np.nonzero(mask)[0]
+        self.reserved_tokens -= int(
+            (self._prompt[idx] + self._out[idx]).sum()
+        )
+        keep = ~mask
+        self._keys = self._keys[keep]
+        self._prompt = self._prompt[keep]
+        self._out = self._out[keep]
+        self._pref = self._pref[keep]
+        self._dec = self._dec[keep]
+        self._arrival = self._arrival[keep]
+        self._enq = self._enq[keep]
+        self._first = self._first[keep]
 
     def kill(self) -> KillReport:
         """Preemption: all KV state is lost; every request must retry."""
         keys = tuple(int(k) for k in self._keys) + tuple(
             e[0] for e in self.queue
         )
+        lost_p = int(self._pref.sum())
+        lost_d = int(self._dec.sum())
+        if self._mig:
+            # migrated-in sequences still awaiting admission carried KV
+            # over the wire; killing the target loses that state too
+            for mp, md, _ in self._mig.values():
+                lost_p += mp
+                lost_d += md
         report = KillReport(
             keys=keys,
             n_batch=len(self._keys),
             n_queued=len(self.queue),
-            lost_prefill_tokens=int(self._pref.sum()),
-            lost_decode_tokens=int(self._dec.sum()),
+            lost_prefill_tokens=lost_p,
+            lost_decode_tokens=lost_d,
         )
         self.queue.clear()
+        self._mig = None
         self.reserved_tokens = 0
         self._keys = _EMPTY_I
         self._prompt = _EMPTY_I
@@ -208,14 +296,21 @@ class ContinuousBatch:
                 break                   # joins at a boundary >= enqueue
             q.popleft()
             self.reserved_tokens += p + o
+            mig = self._mig.pop(key, None) if self._mig else None
             self._keys = np.append(self._keys, key)
             self._prompt = np.append(self._prompt, p)
             self._out = np.append(self._out, o)
-            self._pref = np.append(self._pref, 0)
-            self._dec = np.append(self._dec, 0)
+            if mig is None:
+                self._pref = np.append(self._pref, 0)
+                self._dec = np.append(self._dec, 0)
+                self._first = np.append(self._first, np.nan)
+            else:
+                # migrated-in: KV survived the move — resume progress
+                self._pref = np.append(self._pref, mig[0])
+                self._dec = np.append(self._dec, mig[1])
+                self._first = np.append(self._first, mig[2])
             self._arrival = np.append(self._arrival, arr)
             self._enq = np.append(self._enq, enq)
-            self._first = np.append(self._first, np.nan)
 
     def _retire(self, mask: np.ndarray, end: float,
                 done: List[TokenCompletion]) -> None:

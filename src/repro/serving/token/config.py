@@ -99,6 +99,9 @@ class TokenEngineConfig:
     kv_budget_tokens: int
     prefill_chunk_tokens: int
     max_batch: int
+    # per cached token, bytes resident in HBM — what a KV migration has
+    # to move over the wire (0.0 for attention-free architectures)
+    kv_bytes_per_token: float = 0.0
 
     @classmethod
     def from_latency(
@@ -129,4 +132,5 @@ class TokenEngineConfig:
             prefill_chunk_tokens=knobs.prefill_chunk_tokens,
             max_batch=knobs.max_batch if knobs.max_batch is not None
             else 1 << 30,
+            kv_bytes_per_token=kv_bytes,
         )

@@ -73,6 +73,15 @@ class TokenStats:
     n_killed_queued: int = 0
     lost_prefill_tokens: int = 0
     lost_decode_tokens: int = 0
+    # grace-period migration accounting (repro.migration; all zero when
+    # migration is disabled)
+    n_drained_seqs: int = 0         # finished in place in the window
+    n_migrated_seqs: int = 0        # KV shipped to a surviving replica
+    migrated_kv_tokens: int = 0     # resident tokens that moved
+    saved_prefill_tokens: int = 0   # prefill work not re-done elsewhere
+    saved_decode_tokens: int = 0
+    migration_transfer_s: float = 0.0   # cumulative wire time
+    recompute_saved_s: float = 0.0  # engine-seconds of recompute avoided
 
     # ------------------------------------------------------------------
     @classmethod
@@ -89,6 +98,13 @@ class TokenStats:
         n_killed_queued: int = 0,
         lost_prefill_tokens: int = 0,
         lost_decode_tokens: int = 0,
+        n_drained_seqs: int = 0,
+        n_migrated_seqs: int = 0,
+        migrated_kv_tokens: int = 0,
+        saved_prefill_tokens: int = 0,
+        saved_decode_tokens: int = 0,
+        migration_transfer_s: float = 0.0,
+        recompute_saved_s: float = 0.0,
     ) -> "TokenStats":
         n = len(records)
         ttft = np.fromiter((r.ttft_s for r in records), np.float64, count=n)
@@ -132,6 +148,13 @@ class TokenStats:
             n_killed_queued=n_killed_queued,
             lost_prefill_tokens=lost_prefill_tokens,
             lost_decode_tokens=lost_decode_tokens,
+            n_drained_seqs=n_drained_seqs,
+            n_migrated_seqs=n_migrated_seqs,
+            migrated_kv_tokens=migrated_kv_tokens,
+            saved_prefill_tokens=saved_prefill_tokens,
+            saved_decode_tokens=saved_decode_tokens,
+            migration_transfer_s=migration_transfer_s,
+            recompute_saved_s=recompute_saved_s,
         )
 
     # ------------------------------------------------------------------
@@ -163,6 +186,13 @@ class TokenStats:
             "n_killed_queued": self.n_killed_queued,
             "lost_prefill_tokens": self.lost_prefill_tokens,
             "lost_decode_tokens": self.lost_decode_tokens,
+            "n_drained_seqs": self.n_drained_seqs,
+            "n_migrated_seqs": self.n_migrated_seqs,
+            "migrated_kv_tokens": self.migrated_kv_tokens,
+            "saved_prefill_tokens": self.saved_prefill_tokens,
+            "saved_decode_tokens": self.saved_decode_tokens,
+            "migration_transfer_s": round(self.migration_transfer_s, 6),
+            "recompute_saved_s": round(self.recompute_saved_s, 6),
             "window_s": self.window_s,
         }
         if include_windows:

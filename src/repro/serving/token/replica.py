@@ -103,6 +103,43 @@ class TokenReplica(Replica):
         self._rejected = []
         return failed
 
+    def kill_migrating(
+        self,
+        runtime,                    # repro.migration.MigrationRuntime
+        targets: List["TokenReplica"],
+        now: float,
+        grace_s: float,
+    ) -> Tuple[object, List[Tuple[Request, object]], List[Request]]:
+        """Warned preemption: drain/migrate/kill via the migration
+        runtime instead of dropping everything.
+
+        Returns ``(outcome, drained, failed)``: the
+        :class:`~repro.migration.runtime.PreemptionOutcome`, the drained
+        ``(request, SeqState)`` pairs (they complete at the kill
+        instant; the caller emits their records), and the requests that
+        must retry client-side.  Migrated requests move to the target
+        replica's key map and complete there."""
+        self.state = ReplicaState.DEAD
+        by_rid = {tr.instance.id: tr for tr in targets}
+        outcome = runtime.execute_preemption(
+            self.batch,
+            self.instance,
+            [(tr.instance.id, tr.batch, tr.instance) for tr in targets],
+            now,
+            grace_s,
+        )
+        drained = [
+            (self._by_key.pop(s.key), s) for s in outcome.drained
+        ]
+        for m in outcome.migrated:
+            tgt = by_rid[m.target_rid]
+            tgt._by_key[m.state.key] = self._by_key.pop(m.state.key)
+        self.kill_report = outcome.kill_report
+        failed = [self._by_key.pop(k) for k in outcome.kill_report.keys]
+        failed.extend(self._rejected)
+        self._rejected = []
+        return outcome, drained, failed
+
     def eta_if_submitted(self, req: Request, now: float) -> float:
         svc = (
             self.batch.cfg.overhead_s
