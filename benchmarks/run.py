@@ -19,6 +19,7 @@ from benchmarks import (
     e2e_compare,
     engine_bench,
     engine_speedup,
+    jax_engine,
     latency,
     migration,
     roofline,
@@ -35,6 +36,7 @@ MODULES = {
     "sensitivity": sensitivity,      # Fig. 14c/d
     "engine_bench": engine_bench,    # Fig. 6
     "engine_speedup": engine_speedup,  # legacy vs vector matrix timing
+    "jax_engine": jax_engine,        # jit/vmap batched matrix throughput
     "roofline": roofline,            # deliverable (g)
     "token_engine": token_engine,    # request- vs token-level replicas
     "migration": migration,          # grace-period KV migration off/on

@@ -139,6 +139,14 @@ class ClusterSimulator:
         self._series_ro: List[int] = []
         self._series_nt: List[int] = []
         self._warn_info: Optional[Dict[str, Tuple[float, float]]] = None
+        # dense per-tick views precomputed by run() (pure perf: bit-exact
+        # with the scalar trace accessors, see SpotTrace.dense_ticks)
+        self._zcol: Dict[str, int] = {
+            z: j for j, z in enumerate(zone_names)
+        }
+        self._tick_rows: Optional[List[List[int]]] = None
+        self._warn_cols: Optional[List[List[int]]] = None
+        self._k: Optional[int] = None
         self._preempt_listeners: List[Callable[[Instance, float], None]] = []
         self._terminate_listeners: List[Callable[[Instance, float], None]] = []
         self._ready_listeners: List[Callable[[Instance, float], None]] = []
@@ -221,7 +229,11 @@ class ClusterSimulator:
     def _launch(self, kind: InstanceKind, zone_name: str) -> Optional[Instance]:
         zone = self.catalog.zone(zone_name)
         if kind is InstanceKind.SPOT:
-            cap = self.trace.capacity(zone_name, self.now)
+            if self._tick_rows is not None and self._k is not None \
+                    and zone_name in self._zcol:
+                cap = self._tick_rows[self._k][self._zcol[zone_name]]
+            else:
+                cap = self.trace.capacity(zone_name, self.now)
             in_use = len(self.active_spot(zone_name))
             if in_use + 1 > cap:
                 self.n_launch_failures += 1
@@ -247,18 +259,28 @@ class ClusterSimulator:
         self.instances.append(inst)
         return inst
 
-    def _apply_trace(self) -> None:
+    def _apply_trace(self, k: Optional[int] = None) -> None:
         """Preempt spot instances in zones whose capacity dropped."""
-        row = self.trace.capacity_row(self.now)
-        # one pass over instances instead of one scan per zone
-        by_zone: Dict[str, List[Instance]] = {z: [] for z in self.zone_names}
+        if k is not None and self._tick_rows is not None:
+            row = self._tick_rows[k]
+        else:
+            d = self.trace.capacity_row(self.now)
+            row = [d[z] for z in self.zone_names]
+        # one pass over instances instead of one scan per zone; zones
+        # without active spot can never have excess > 0, so skip them
+        by_zone: Dict[str, List[Instance]] = {}
+        zcol = self._zcol
         for i in self.instances:
-            if i.is_spot() and i.is_active() and i.zone in by_zone:
-                by_zone[i.zone].append(i)
-        for zone_name in self.zone_names:
-            cap = row[zone_name]
-            active = by_zone[zone_name]
-            excess = len(active) - cap
+            if i.is_spot() and i.is_active() and i.zone in zcol:
+                by_zone.setdefault(i.zone, []).append(i)
+        if not by_zone:
+            return
+        for zone_name, active in (
+            (z, by_zone.get(z)) for z in self.zone_names
+        ):
+            if not active:
+                continue
+            excess = len(active) - row[zcol[zone_name]]
             if excess <= 0:
                 continue
             # newest first: fresh instances are evicted first in a crunch
@@ -271,12 +293,7 @@ class ClusterSimulator:
                     fn(inst, self.now)
                 self._retire(inst)
 
-    def _deliver_warnings(self) -> None:
-        """Best-effort preemption warnings (§2.3): look ahead by the cloud's
-        advertised warning lead (120 s AWS, 30 s GCP/Azure); if capacity will
-        drop, warn (probabilistically — warnings are best-effort)."""
-        if not self.config.warning_enabled:
-            return
+    def _resolve_warn_info(self) -> Dict[str, Tuple[float, float]]:
         if self._warn_info is None:
             # zone -> (warning lead, delivery prob), resolved once; a trace
             # may carry its own observed lead, overriding the cloud default
@@ -298,9 +315,33 @@ class ClusterSimulator:
                 )
                 for z in self.zone_names
             }
+        return self._warn_info
+
+    def _deliver_warnings(self, k: Optional[int] = None) -> None:
+        """Best-effort preemption warnings (§2.3): look ahead by the cloud's
+        advertised warning lead (120 s AWS, 30 s GCP/Azure); if capacity will
+        drop, warn (probabilistically — warnings are best-effort)."""
+        if not self.config.warning_enabled:
+            return
+        warn_info = self._resolve_warn_info()
+        if k is not None and self._warn_cols is not None:
+            # precomputed path: same drops, same guard, and crucially the
+            # same rng draw count/order (one draw per dropping zone, in
+            # zone_names order) as the scalar path below
+            cols = self._warn_cols[k]
+            if not cols:
+                return
+            for j in cols:
+                zone_name = self.zone_names[j]
+                if self.rng.random() < warn_info[zone_name][1]:
+                    for inst in self.active_spot(zone_name):
+                        if inst.warned_at is None:
+                            inst.warned_at = self.now
+                    self._emit(EventKind.WARNING, zone_name)
+            return
         now_row = self.trace.capacity_row(self.now)
         for zone_name in self.zone_names:
-            lead, prob = self._warn_info[zone_name]
+            lead, prob = warn_info[zone_name]
             horizon = self.now + lead
             if horizon >= self.trace.duration_s:
                 continue
@@ -351,18 +392,41 @@ class ClusterSimulator:
             else:  # pragma: no cover - defensive
                 raise TypeError(f"unknown action {act!r}")
 
+    def _precompute(self, dt: float, ticks: int) -> None:
+        """Dense per-tick trace views for the run loop.
+
+        Bit-exact with the scalar accessors (same clamped indexing, same
+        float arithmetic — see :meth:`SpotTrace.dense_ticks`); replaces
+        the per-tick ``capacity_row`` dict builds and lookahead
+        ``capacity`` calls that dominated the control-plane profile.
+        """
+        tr = self.trace
+        cap = tr.dense_ticks(dt, ticks, self.zone_names)
+        self._tick_rows = cap.tolist()
+        if self.config.warning_enabled:
+            warn_info = self._resolve_warn_info()
+            t = np.arange(ticks, dtype=np.float64) * dt
+            drop = np.zeros((ticks, len(self.zone_names)), dtype=bool)
+            for j, z in enumerate(self.zone_names):
+                lead = warn_info[z][0]
+                ahead = tr.dense_ticks(dt, ticks, [z], offset_s=lead)[:, 0]
+                drop[:, j] = (ahead < cap[:, j]) & (t + lead < tr.duration_s)
+            self._warn_cols = [np.flatnonzero(r).tolist() for r in drop]
+
     # -- main loop ---------------------------------------------------------
     def run(self, duration_s: Optional[float] = None) -> SimResult:
         dur = float(duration_s or self.trace.duration_s)
         dt = self.config.control_interval_s
         ticks = int(dur / dt)
         ok_ticks = 0
+        self._precompute(dt, ticks)
 
         for k in range(ticks):
             self.now = k * dt
-            self._apply_trace()
+            self._k = k
+            self._apply_trace(k)
             self._step_instances()
-            self._deliver_warnings()
+            self._deliver_warnings(k)
             if self.tick_hook is not None:
                 self.tick_hook(self.now, self)
             n_target = self.autoscaler.target(self.now)

@@ -68,6 +68,9 @@ class SpotTrace:
         self._zone_idx: Dict[str, int] = {
             z: j for j, z in enumerate(self.zones)
         }
+        # memoized dense per-tick tensors (dense_ticks); traces are
+        # immutable by convention so cached views never go stale
+        self._dense_cache: Dict[Tuple, np.ndarray] = {}
         if self.preemption_warning_s is not None:
             w = float(self.preemption_warning_s)
             if not (w >= 0.0):
@@ -104,6 +107,46 @@ class SpotTrace:
     def capacity_row(self, t: float) -> Dict[str, int]:
         row = self.cap[self.step_of(t)]
         return {z: int(c) for z, c in zip(self.zones, row)}
+
+    def dense_ticks(
+        self,
+        dt: float,
+        ticks: int,
+        zones: Optional[Sequence[str]] = None,
+        offset_s: float = 0.0,
+    ) -> np.ndarray:
+        """Dense per-tick capacity tensor for a fixed control interval.
+
+        ``out[k, j]`` equals ``capacity(zones[j], k*dt + offset_s)`` for
+        every tick ``k < ticks`` — same clamped ``step_of`` indexing and
+        the same float arithmetic (``k*dt`` then ``+ offset``) as the
+        scalar accessors, so replacing per-tick ``capacity_row`` calls
+        with one precomputed tensor is bit-exact.  The simulator run loop
+        and the JAX scenario engine both consume these; results are
+        memoized (read-only views) since suites replay one trace across
+        many cells.
+        """
+        key = (
+            float(dt), int(ticks),
+            tuple(zones) if zones is not None else None,
+            float(offset_s),
+        )
+        out = self._dense_cache.get(key)
+        if out is None:
+            t = np.arange(int(ticks), dtype=np.float64) * float(dt) \
+                + float(offset_s)
+            idx = np.minimum(
+                (t / self.dt).astype(np.int64), self.steps - 1
+            )
+            cols = (
+                np.arange(len(self.zones))
+                if zones is None
+                else np.array([self.zone_index(z) for z in zones])
+            )
+            out = self.cap[np.ix_(idx, cols)]
+            out.setflags(write=False)
+            self._dense_cache[key] = out
+        return out
 
     # -- statistics (used by the Fig. 3 / Fig. 5 benchmarks) -------------
     def availability(self, zone: str) -> float:

@@ -31,7 +31,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import json
 import os
 import time
 from typing import (
@@ -94,12 +93,56 @@ class Scenario:
         return "/".join(str(v) for v in self.labels.values())
 
 
+def _canonical_args(value: Any, path: str = "workload.args") -> Hashable:
+    """Canonicalize a workload-args value into a hashable, order-insensitive
+    structure for the tape key.
+
+    Strict by design: only JSON-ish primitives and containers are
+    accepted.  The previous ``json.dumps(..., default=repr)`` fallback
+    silently stringified arbitrary objects, and a ``repr`` that embeds a
+    memory address (the default ``object.__repr__``) yields a key that
+    differs across processes/runs — spawn-started workers then regenerate
+    tapes and logically identical cells stop sharing one, breaking the
+    §5.1 same-tape methodology.  Anything un-canonicalizable now raises
+    ``SpecError`` at key-construction time instead.
+    """
+    if value is None or isinstance(value, str):
+        return value
+    if isinstance(value, bool):
+        # tag bools: True == 1 under dict/tuple equality, but workload
+        # args {"flag": True} and {"flag": 1} must not share a tape key
+        return ("__bool__", value)
+    if isinstance(value, (int, float)):
+        return value
+    if isinstance(value, (list, tuple)):
+        return tuple(
+            _canonical_args(v, f"{path}[{k}]") for k, v in enumerate(value)
+        )
+    if isinstance(value, Mapping):
+        items = []
+        for k in sorted(value, key=str):
+            if not isinstance(k, str):
+                raise SpecError(
+                    f"{path}: mapping key {k!r} is not a string; tape "
+                    "keys require string-keyed mappings"
+                )
+            items.append((k, _canonical_args(value[k], f"{path}.{k}")))
+        return tuple(items)
+    raise SpecError(
+        f"{path}: cannot canonicalize {type(value).__name__} value "
+        f"{value!r} for the shared-tape key; workload args must be "
+        "JSON-like (None/bool/int/float/str and lists/dicts thereof) so "
+        "the key is stable across processes"
+    )
+
+
 def _workload_tape_key(spec: ServiceSpec) -> Tuple:
     """Tapes are equal iff workload spec and arrival horizon are equal."""
     w = spec.workload
     # args may hold unhashable values (e.g. a client_regions mapping) —
-    # canonical JSON keeps the key hashable and order-insensitive
-    args_key = json.dumps(dict(w.args), sort_keys=True, default=repr)
+    # the canonical tuple form keeps the key hashable, order-insensitive
+    # and — unlike repr-based fallbacks — stable across processes
+    args_key = _canonical_args(dict(w.args))
     return (
         w.kind, w.rate_per_s, w.seed,
         args_key,
@@ -347,10 +390,17 @@ class ScenarioSuite:
         """Run every scenario; returns the aggregated report.
 
         ``engine`` overrides ``spec.sim.engine`` for every cell
-        ("vector" / "legacy").  ``workers`` fans independent cells out
-        over processes ("auto" = one per CPU); results are identical for
-        any worker count.  ``save_to`` writes the JSON artifact into the
-        given directory (e.g. ``artifacts/bench``).
+        ("vector" / "legacy" / "jax").  ``workers`` fans independent
+        cells out over processes ("auto" = one per CPU); results are
+        identical for any worker count.  ``save_to`` writes the JSON
+        artifact into the given directory (e.g. ``artifacts/bench``).
+
+        ``engine="jax"`` takes the matrix-batched path: the control
+        plane of every cell is replayed in-process (phase A), then all
+        request-model data planes run as one vmapped XLA program per
+        shape group (phase B) — ``workers`` is ignored, the batching
+        *is* the parallelism.  Results are identical to the per-cell
+        engines (tests/test_jax_engine.py).
         """
         n_workers = self._resolve_workers(workers)
         t0 = time.perf_counter()
@@ -358,7 +408,15 @@ class ScenarioSuite:
         # repeated runs of one suite (e.g. benchmark trials) pay tape
         # generation once regardless of worker count
         self._prime_tape_cache()
-        if n_workers <= 1 or len(self.scenarios) <= 1:
+        use_jax = engine == "jax" or (
+            engine is None
+            and bool(self.scenarios)
+            and all(sc.spec.sim.engine == "jax" for sc in self.scenarios)
+        )
+        if use_jax:
+            n_workers = 1
+            cells = self._run_jax_matrix(progress)
+        elif n_workers <= 1 or len(self.scenarios) <= 1:
             n_workers = 1
             cells = []
             for sc in self.scenarios:
@@ -382,6 +440,53 @@ class ScenarioSuite:
         return report
 
     # ------------------------------------------------------------------
+    def _run_jax_matrix(self, progress: bool) -> List[CellResult]:
+        """The jit/vmap path: build every cell, replay control planes,
+        then run all request-model data planes as one batched program.
+
+        Token-model cells and queue-overflow lanes fall back to the
+        NumPy oracle inside :func:`repro.serving.jaxengine.run_cells`,
+        so a mixed matrix still returns a complete, exact report.
+        """
+        from repro.serving.jaxengine import run_cells
+
+        builds = []
+        for sc in self.scenarios:
+            spec = sc.spec
+            if spec.sim.engine != "jax":
+                spec = dataclasses.replace(
+                    spec, sim=dataclasses.replace(spec.sim, engine="jax")
+                )
+            requests: Optional[List[Request]] = None
+            key = _effective_tape_key(sc)
+            if key is not None:
+                requests = _worker_tapes.get(key)
+                if requests is None:
+                    requests = _worker_tapes[key] = build_requests(spec)
+            t0 = time.perf_counter()
+            resolved = build_service(
+                spec, trace=sc.trace, requests=requests
+            )
+            builds.append((sc, spec, resolved,
+                           time.perf_counter() - t0))
+        t0 = time.perf_counter()
+        results = run_cells(
+            [b[2].simulator for b in builds],
+            [b[1].sim.duration_s for b in builds],
+        )
+        # the batch is one program: attribute its wall clock evenly
+        share = (time.perf_counter() - t0) / max(len(builds), 1)
+        cells: List[CellResult] = []
+        for (sc, _spec, _res, build_s), result in zip(builds, results):
+            cells.append(
+                CellResult.from_result(sc.labels, result,
+                                       build_s + share)
+            )
+            if progress:
+                print(f"[suite {self.name}] {cells[-1].cell_id} done "
+                      f"({len(cells)}/{len(builds)})", flush=True)
+        return cells
+
     def _engine_label(self) -> str:
         engines = {sc.spec.sim.engine for sc in self.scenarios}
         return engines.pop() if len(engines) == 1 else "mixed"
@@ -443,4 +548,17 @@ class ScenarioSuite:
                 if progress:
                     print(f"[suite {self.name}] {cells[i].cell_id} done "
                           f"({n_done}/{len(payloads)})", flush=True)
+        # completeness: a lost future must be a loud failure, not a
+        # silently shorter report (the old `[c for c in cells if c]`
+        # filter dropped unfilled cells without a trace)
+        missing = [
+            self.scenarios[i].cell_id
+            for i, c in enumerate(cells) if c is None
+        ]
+        if missing:
+            raise RuntimeError(
+                f"scenario suite {self.name!r}: {len(missing)} of "
+                f"{len(cells)} cells never returned a result "
+                f"(lost futures): {missing}"
+            )
         return [c for c in cells if c is not None]

@@ -161,7 +161,8 @@ class ResolvedService:
     autoscaler: Autoscaler
     load_balancer: LoadBalancer
     requests: List[Request]
-    # ServingSimulator or VectorizedServingEngine, per spec.sim.engine
+    # ServingSimulator, VectorizedServingEngine or JaxServingEngine,
+    # per spec.sim.engine
     simulator: "ServingSimulator | VectorizedServingEngine"
 
 
@@ -198,10 +199,15 @@ def build_service(
         if spec.workload.kind == "none" and requests is None
         else sim_spec.sub_step_s
     )
-    engine_cls = (
-        ServingSimulator if sim_spec.engine == "legacy"
-        else VectorizedServingEngine
-    )
+    if sim_spec.engine == "legacy":
+        engine_cls = ServingSimulator
+    elif sim_spec.engine == "jax":
+        # lazy: only sim.engine: "jax" runs pay the jax import
+        from repro.serving.jaxengine import JaxServingEngine
+
+        engine_cls = JaxServingEngine
+    else:
+        engine_cls = VectorizedServingEngine
     model_cfg = get_config(spec.model)
     latency_model = make_latency_model(
         model_cfg,
@@ -227,33 +233,41 @@ def build_service(
             iter_overhead_s=serving.iter_overhead_s,
             goodput_window_s=serving.goodput_window_s,
         )
-    simulator = engine_cls(
-        trace,
-        policy,
-        reqs,
-        model_cfg,
-        itype=spec.resources.instance_type,
-        catalog=catalog,
-        autoscaler=autoscaler,
-        lb=lb,
-        sim_config=SimConfig(
+    try:
+        simulator = engine_cls(
+            trace,
+            policy,
+            reqs,
+            model_cfg,
             itype=spec.resources.instance_type,
-            cold_start_s=sim_spec.cold_start_s,
-            control_interval_s=sim_spec.control_interval_s,
-            warning_enabled=sim_spec.warning_enabled,
-            seed=sim_spec.seed,
-            record_series=sim_spec.record_series,
-        ),
-        timeout_s=sim_spec.timeout_s,
-        sub_step_s=sub_step,
-        workload_name=spec.workload.kind,
-        concurrency=sim_spec.concurrency,
-        concurrency_cap=serving.concurrency_cap,
-        latency_model=latency_model,
-        replica_model=sim_spec.replica_model,
-        token_scheduler=token_knobs,
-        migration=migration,
-    )
+            catalog=catalog,
+            autoscaler=autoscaler,
+            lb=lb,
+            sim_config=SimConfig(
+                itype=spec.resources.instance_type,
+                cold_start_s=sim_spec.cold_start_s,
+                control_interval_s=sim_spec.control_interval_s,
+                warning_enabled=sim_spec.warning_enabled,
+                seed=sim_spec.seed,
+                record_series=sim_spec.record_series,
+            ),
+            timeout_s=sim_spec.timeout_s,
+            sub_step_s=sub_step,
+            workload_name=spec.workload.kind,
+            concurrency=sim_spec.concurrency,
+            concurrency_cap=serving.concurrency_cap,
+            latency_model=latency_model,
+            replica_model=sim_spec.replica_model,
+            token_scheduler=token_knobs,
+            migration=migration,
+        )
+    except TypeError as e:
+        # the array engines reject configurations they cannot simulate
+        # exactly (e.g. custom balancer subclasses); surface that as a
+        # spec problem with the engine that would accept it
+        raise SpecError(
+            f"sim.engine {sim_spec.engine!r} rejected this spec: {e}"
+        ) from e
     return ResolvedService(
         spec=spec,
         trace=trace,

@@ -528,7 +528,7 @@ class ServingSpec:
 # ---------------------------------------------------------------------------
 
 
-ENGINE_NAMES = ("vector", "legacy")
+ENGINE_NAMES = ("vector", "legacy", "jax")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -537,9 +537,13 @@ class SimSpec:
 
     ``engine`` picks the serving hot path: ``"vector"`` (default) is the
     NumPy array engine in ``repro.serving.engine``; ``"legacy"`` is the
-    per-request object simulator in ``repro.serving.sim``.  The two are
-    decision-for-decision equivalent (see ``tests/test_differential.py``);
-    the vector engine is simply several times faster.
+    per-request object simulator in ``repro.serving.sim``; ``"jax"`` is
+    the two-phase jit/vmap engine in ``repro.serving.jaxengine`` that
+    compiles the request-model data plane with ``lax.scan`` and batches
+    whole scenario matrices with ``vmap`` (token-model cells fall back
+    to the vector data plane).  All three are decision-for-decision
+    equivalent (see ``tests/test_differential.py`` and
+    ``tests/test_jax_engine.py``); they differ only in throughput.
 
     ``replica_model`` picks how a replica prices work: ``"request"``
     (default) is the M/G/c model with frozen per-request service times;

@@ -96,8 +96,12 @@ class _Rep:
         self.rtt = rtt                       # client-region code -> seconds
         self.running: List[Tuple[float, int]] = []   # (finish_s, req index)
         self.queue: List[int] = []                   # req indices, FIFO
-        self.qage: List[float] = []          # parallel arrival times
-        self.qmin = _INF                     # lower bound on queued arrivals
+        # parallel *effective* ages: arrival − client RTT, so the shared
+        # `t - age > timeout` expiry predicate is RTT-inclusive
+        # (t - (arr - rtt) > to  ⇔  t - arr + rtt > to), matching the
+        # deadline applied to completed responses
+        self.qage: List[float] = []
+        self.qmin = _INF                     # lower bound on queued eff. ages
         self.batch: Optional[ContinuousBatch] = None   # token mode only
 
     @property
@@ -587,6 +591,7 @@ class VectorizedServingEngine:
         reps = self._reps
         touched = self._touched
         svc = self._svc_l
+        rcode = self._rcode_l
         heap = self._heap
         conc = self.concurrency
         qn = 0
@@ -616,7 +621,7 @@ class VectorizedServingEngine:
                     run.append((finish, i))
                     heapq.heappush(heap, (finish, s))
                     continue
-                a = arr[i]
+                a = arr[i] - rep.rtt[rcode[i]]
                 rep.queue.append(i)
                 rep.qage.append(a)
                 touched.add(s)
@@ -662,7 +667,7 @@ class VectorizedServingEngine:
                     run.append((finish, i))
                     heapq.heappush(heap, (finish, rep.slot))
                     continue
-                a = arr[i]
+                a = arr[i] - rep.rtt[rc]
                 rep.queue.append(i)
                 rep.qage.append(a)
                 touched.add(rep.slot)
@@ -819,6 +824,7 @@ class VectorizedServingEngine:
         busy = self._busy
         ptok = self._ptok_l
         otok = self._otok_l
+        rcode = self._rcode_l
         check_to = t - self._pmin > timeout
         if self._lb_kind == "rr":
             nready = len(ready)
@@ -831,7 +837,8 @@ class VectorizedServingEngine:
                 j = cur % nready
                 s = ready[j]
                 cur += 1
-                if reps[s].batch.enqueue(i, ptok[i], otok[i], arr[i], t):
+                if reps[s].batch.enqueue(i, ptok[i], otok[i], arr[i], t,
+                                         rtt_s=reps[s].rtt[rcode[i]]):
                     loads[j] += 1
                     busy.add(s)
                 else:
@@ -865,7 +872,8 @@ class VectorizedServingEngine:
                     ):
                         best, bl, br, bi = j, lj, col[j], ids[j]
                 rep = ready_reps[best]
-                if rep.batch.enqueue(i, ptok[i], otok[i], arr[i], t):
+                if rep.batch.enqueue(i, ptok[i], otok[i], arr[i], t,
+                                     rtt_s=rep.rtt[rc]):
                     loads[best] += 1
                     busy.add(rep.slot)
                 else:

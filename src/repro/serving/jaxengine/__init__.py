@@ -1,0 +1,35 @@
+"""JAX-native scenario engine: jit/vmap the serving sweep itself.
+
+Two-phase design — phase A replays the control plane in Python with the
+real cluster simulator and records a dense replica schedule; phase B
+compiles the request-model serving data plane as one ``lax.scan`` and
+``vmap``s it across every cell of a scenario matrix that shares a shape
+signature.  See :mod:`repro.serving.jaxengine.schedule` (phase A),
+:mod:`repro.serving.jaxengine.kernel` (phase B) and
+:mod:`repro.serving.jaxengine.engine` (the facade / batch API).
+
+Importing this package pulls in :mod:`jax`; the service builder imports
+it lazily so ``sim.engine: "vector"`` runs never pay that cost.
+"""
+
+from repro.serving.jaxengine.engine import (
+    JaxServingEngine,
+    assemble_result,
+    run_cells,
+    run_schedules,
+)
+from repro.serving.jaxengine.schedule import (
+    CellSchedule,
+    SubStepGrid,
+    build_grid,
+)
+
+__all__ = [
+    "JaxServingEngine",
+    "CellSchedule",
+    "SubStepGrid",
+    "assemble_result",
+    "build_grid",
+    "run_cells",
+    "run_schedules",
+]

@@ -1,0 +1,474 @@
+"""Phase B: the JAX-compiled serving data plane.
+
+One :func:`lax.scan` replays the request-model sub-step loop over a
+precomputed control-plane schedule (``schedule.CellSchedule``): per-slot
+ready windows, RTT rows and kill events are *data*, so the scan carries
+only fixed-shape serving state and the whole (policies × traces × seeds)
+matrix runs as a single ``vmap``-ed XLA program.
+
+Exactness contract (differential-tested against the NumPy
+``VectorizedServingEngine`` oracle):
+
+* the sub-step grid is precomputed in Python with the engines' own float
+  accumulation, so timeout instants and arrival batches match bit-for-bit;
+* every predicate (bare pending expiry, RTT-inclusive queue expiry,
+  completion deadline, immediate-start condition, LL/RR routing ties) is
+  the oracle's predicate — several oracle *guards* (pmin/qmin bounds, the
+  ``_active`` skip, touched/due step sets) are pure-performance pruning
+  whose removal is outcome-equivalent, which is what makes a fixed-shape
+  scan possible;
+* pending expiry is lazy: an expired pending request is dropped at the
+  next dispatch's per-request check (same predicate, later ``t`` — still
+  expired) or by the end-of-run drain, so the no-ready expiry sweep needs
+  no per-step O(P) work;
+* a dropped request keeps ``status == 0`` and is counted failed at the
+  drain — loops never touch the O(N) metric arrays, which is what keeps
+  their carries small (see below).
+
+State layout per lane (R slots, C concurrency, Q queue capacity, N tape):
+
+* pending — ring buffer of request indices (capacity N: a request lives
+  in at most one place; row N is a scatter dump for masked writes);
+* running — ``run_fin/run_idx [R, C]`` compacted in start order with
+  ``+inf`` padding, ``run_n [R]``;
+* queues — slot-local pools ``q_idx/q_age/q_seq/q_valid [R, Q]`` with a
+  monotone sequence number for FIFO order and a carried per-slot min
+  effective age (``arrival - rtt``) so the expiry guard is O(R) per step;
+* metrics — ``status [N+1]`` (0 unresolved / 1 completed / 2 failed, the
+  last row is a scatter dump) and ``e2e [N+1]``, written only by the
+  vectorized completion stage.
+
+Performance shape: under ``vmap``, every ``lax.while_loop`` iteration
+select-copies its whole carry per lane, so data-proportional work must
+not run through a while loop.  Arrivals are a masked vectorized scatter
+(the per-step count is bounded by the host-computed ``AMAX``), dispatch
+and queue-drain starts are fixed-length masked ``lax.scan``s of AMAX
+iterations (scan bodies are batched without carry selects) with a
+while-loop *remainder* that only spins on rare backlog spikes (outage
+recovery, kill re-pends), and queue expiry clears a whole hit slot per
+iteration.  Kills stay a plain while loop — they are control-plane-rare.
+
+A lane whose queue pool would overflow sets a flag; the facade reruns
+that cell on the NumPy oracle, so capacity is a performance knob, never a
+correctness one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import enable_x64
+
+# float64 parity with the NumPy engines is scoped to run_group's
+# enable_x64() context — the Pallas model kernels elsewhere in this
+# repo assume the default-f32 world, so the flag must never be flipped
+# process-globally here
+
+_BIG_I = np.iinfo(np.int64).max
+
+#: masked pops per inner-scan iteration (dispatch / starts): amortizes
+#: the per-iteration fixed cost without changing pop order
+_UNROLL = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelKey:
+    """Static shape/flag signature — one compiled program per key."""
+
+    G: int          # grid points
+    W: int          # control windows
+    N: int          # padded tape length
+    R: int          # padded replica slots
+    Q: int          # queue pool capacity per slot
+    C: int          # concurrency (unrolled)
+    NREG: int       # padded client-region count
+    E: int          # padded kill events
+    AMAX: int       # max arrivals in any sub-step (exact, host-computed)
+    ATYP: int       # p99 arrivals per sub-step: sizes the masked scans
+    lb_rr: bool     # round-robin (else least-loaded)
+    expire_on: bool  # timeout_s > 0: run the queue-expiry sweep
+
+
+_KERNELS: Dict[KernelKey, object] = {}
+
+#: small-state keys: everything the per-step loops may carry.  The O(N)
+#: metric arrays (status/e2e) are deliberately NOT here — a while-loop
+#: carry under vmap is select-copied per iteration per lane.
+_SMALL = (
+    "pend", "p_head", "p_cnt", "a_ptr",
+    "run_fin", "run_idx", "run_n",
+    "q_idx", "q_age", "q_seq", "q_valid", "q_cnt", "qmin",
+    "seq_ctr", "rr_cur", "kill_ptr", "n_retried", "overflow",
+)
+
+
+def _build_kernel(key: KernelKey):
+    G, N, R, Q, C = key.G, key.N, key.R, key.Q, key.C
+    lb_rr, expire_on, E = key.lb_rr, key.expire_on, key.E
+    AMAX = max(key.AMAX, 1)
+    # scans cover the typical step; the chunked remainder loops absorb
+    # the Poisson tail (≤1 % of steps), so executed pop-bodies per step
+    # track the p99 rather than the worst case
+    NCHUNK = max(1, -(-min(max(key.ATYP, 1), AMAX) // _UNROLL))
+
+    def _pend_push(s, i):
+        s = dict(s)
+        pos = (s["p_head"] + s["p_cnt"]) % N
+        s["pend"] = s["pend"].at[pos].set(i)
+        s["p_cnt"] = s["p_cnt"] + 1
+        return s
+
+    def _q_pop(s, slot, j):
+        """Remove pool cell ``j`` from ``slot``; refresh the cached min."""
+        s = dict(s)
+        s["q_valid"] = s["q_valid"].at[slot, j].set(False)
+        s["q_cnt"] = s["q_cnt"].at[slot].add(-1)
+        ages = jnp.where(s["q_valid"][slot], s["q_age"][slot], jnp.inf)
+        s["qmin"] = s["qmin"].at[slot].set(ages.min())
+        return s
+
+    def lane(arr, svc, rcode, rtt, ready_mask, kill_slot, kill_g,
+             timeout, ts, gs, wins):
+        # arr/svc [N] (+inf / 1.0 padded), rcode [N], rtt [R, NREG],
+        # ready_mask [W, R] bool, kill_slot [E], kill_g [E] (grid index,
+        # G ⇒ post-horizon), timeout scalar; ts/gs/wins [G] shared.
+        st0 = {
+            "pend": jnp.zeros(N + 1, dtype=jnp.int64),
+            "p_head": jnp.zeros((), dtype=jnp.int64),
+            "p_cnt": jnp.zeros((), dtype=jnp.int64),
+            "a_ptr": jnp.zeros((), dtype=jnp.int64),
+            "run_fin": jnp.full((R, C), jnp.inf),
+            "run_idx": jnp.zeros((R, C), dtype=jnp.int64),
+            "run_n": jnp.zeros(R, dtype=jnp.int64),
+            "q_idx": jnp.zeros((R, Q), dtype=jnp.int64),
+            "q_age": jnp.zeros((R, Q)),
+            "q_seq": jnp.zeros((R, Q), dtype=jnp.int64),
+            "q_valid": jnp.zeros((R, Q), dtype=bool),
+            "q_cnt": jnp.zeros(R, dtype=jnp.int64),
+            "qmin": jnp.full(R, jnp.inf),
+            "seq_ctr": jnp.zeros((), dtype=jnp.int64),
+            "rr_cur": jnp.zeros((), dtype=jnp.int64),
+            "kill_ptr": jnp.zeros((), dtype=jnp.int64),
+            "n_retried": jnp.zeros((), dtype=jnp.int64),
+            "overflow": jnp.zeros((), dtype=bool),
+            "status": jnp.zeros(N + 1, dtype=jnp.int8),
+            "e2e": jnp.zeros(N + 1),
+        }
+
+        def step(st, xs):
+            t, g, win = xs
+            s = {k: st[k] for k in _SMALL}
+
+            # -- 1) kill events due before this sub-step ----------------
+            if E > 0:
+                def kill_cond(s):
+                    kp = jnp.minimum(s["kill_ptr"], E - 1)
+                    return (s["kill_ptr"] < E) & (kill_g[kp] <= g)
+
+                def kill_body(s):
+                    kp = s["kill_ptr"]
+                    slot = kill_slot[kp]
+                    s = dict(s)
+                    s["n_retried"] = (
+                        s["n_retried"] + s["run_n"][slot] + s["q_cnt"][slot]
+                    )
+                    # in-flight work re-pends first, in start order
+                    for c in range(C):
+                        take = c < s["run_n"][slot]
+                        pos = (s["p_head"] + s["p_cnt"]) % N
+                        s["pend"] = s["pend"].at[pos].set(
+                            jnp.where(take, s["run_idx"][slot, c],
+                                      s["pend"][pos])
+                        )
+                        s["p_cnt"] = s["p_cnt"] + take
+                    # then the queue, FIFO
+
+                    def qm_cond(s2):
+                        return s2["q_cnt"][slot] > 0
+
+                    def qm_body(s2):
+                        seqs = jnp.where(
+                            s2["q_valid"][slot], s2["q_seq"][slot], _BIG_I
+                        )
+                        j = jnp.argmin(seqs)
+                        s2 = _pend_push(s2, s2["q_idx"][slot, j])
+                        return _q_pop(s2, slot, j)
+
+                    s = lax.while_loop(qm_cond, qm_body, s)
+                    s = dict(s)
+                    s["run_fin"] = s["run_fin"].at[slot].set(jnp.inf)
+                    s["run_n"] = s["run_n"].at[slot].set(0)
+                    s["kill_ptr"] = kp + 1
+                    return s
+
+                s = lax.while_loop(kill_cond, kill_body, s)
+
+            # -- 2) arrivals (vectorized: ≤ AMAX per sub-step by
+            #       construction; the flag is insurance, not a path) -----
+            new_ptr = jnp.searchsorted(arr, t, side="right").astype(
+                jnp.int64
+            )
+            cnt = new_ptr - s["a_ptr"]
+            ks = jnp.arange(AMAX, dtype=jnp.int64)
+            src = s["a_ptr"] + ks
+            valid = src < new_ptr
+            pos = jnp.where(valid, (s["p_head"] + s["p_cnt"] + ks) % N, N)
+            s["pend"] = s["pend"].at[pos].set(src)
+            s["p_cnt"] = s["p_cnt"] + cnt
+            s["a_ptr"] = new_ptr
+            s["overflow"] = s["overflow"] | (cnt > AMAX)
+
+            # -- 3) due + dispatch --------------------------------------
+            ready = ready_mask[win]
+            nready = ready.sum()
+            due = (s["run_fin"] <= t).any(axis=1)   # pads/empties are +inf
+
+            def disp_body(s, act):
+                s = dict(s)
+                i = s["pend"][s["p_head"]]
+                s["p_head"] = (s["p_head"] + jnp.where(act, 1, 0)) % N
+                s["p_cnt"] = s["p_cnt"] - jnp.where(act, 1, 0)
+                expired = t - arr[i] > timeout
+                loads = s["run_n"] + s["q_cnt"]
+                rc = rcode[i]
+                if lb_rr:
+                    # nready==0 only reaches here masked (act False)
+                    j = s["rr_cur"] % jnp.maximum(nready, 1)
+                    slot = jnp.argmax(jnp.cumsum(ready) == j + 1)
+                    s["rr_cur"] = s["rr_cur"] + jnp.where(
+                        act & (~expired), 1, 0
+                    )
+                else:
+                    # least-loaded: lexicographic argmin over (load, rtt);
+                    # ready order == slot order == id order, so the
+                    # first-index tie-break IS the oracle's id tie-break
+                    col = rtt[:, rc]
+                    lmask = jnp.where(ready, loads, _BIG_I)
+                    c1 = ready & (loads == lmask.min())
+                    colm = jnp.where(c1, col, jnp.inf)
+                    c2 = c1 & (col == colm.min())
+                    slot = jnp.argmax(c2)
+                rn = s["run_n"][slot]
+                imm = (s["q_cnt"][slot] == 0) & (rn < C) & (~due[slot])
+                do_start = act & (~expired) & imm
+                do_queue = act & (~expired) & (~imm)
+                # immediate start (queue-then-start within this sub-step)
+                rn_c = jnp.minimum(rn, C - 1)
+                fin = t + svc[i] * (1.0 + 0.15 * rn)
+                s["run_fin"] = s["run_fin"].at[slot, rn_c].set(
+                    jnp.where(do_start, fin, s["run_fin"][slot, rn_c])
+                )
+                s["run_idx"] = s["run_idx"].at[slot, rn_c].set(
+                    jnp.where(do_start, i, s["run_idx"][slot, rn_c])
+                )
+                s["run_n"] = s["run_n"].at[slot].add(do_start)
+                # queue append with effective age (arrival − rtt): the
+                # shared `t - age > timeout` sweep is then RTT-inclusive
+                age = arr[i] - rtt[slot, rc]
+                free = jnp.argmin(s["q_valid"][slot])      # first False
+                s["overflow"] = s["overflow"] | (
+                    do_queue & s["q_valid"][slot].all()
+                )
+                s["q_idx"] = s["q_idx"].at[slot, free].set(
+                    jnp.where(do_queue, i, s["q_idx"][slot, free])
+                )
+                s["q_age"] = s["q_age"].at[slot, free].set(
+                    jnp.where(do_queue, age, s["q_age"][slot, free])
+                )
+                s["q_seq"] = s["q_seq"].at[slot, free].set(
+                    jnp.where(do_queue, s["seq_ctr"],
+                              s["q_seq"][slot, free])
+                )
+                s["q_valid"] = s["q_valid"].at[slot, free].set(
+                    s["q_valid"][slot, free] | do_queue
+                )
+                s["q_cnt"] = s["q_cnt"].at[slot].add(do_queue)
+                s["qmin"] = s["qmin"].at[slot].set(
+                    jnp.where(
+                        do_queue,
+                        jnp.minimum(s["qmin"][slot], age),
+                        s["qmin"][slot],
+                    )
+                )
+                s["seq_ctr"] = s["seq_ctr"] + do_queue
+                # a lazily-expired pending entry is simply dropped here:
+                # status stays 0 and the drain counts it failed
+                return s
+
+            def disp_cond(s):
+                return (s["p_cnt"] > 0) & (nready > 0)
+
+            def disp_chunk(s, _):
+                # K masked pops per iteration: the per-iteration fixed
+                # cost (op dispatch dominates on CPU) amortizes over K
+                for _k in range(_UNROLL):
+                    s = disp_body(s, disp_cond(s))
+                return s, None
+
+            s, _ = lax.scan(disp_chunk, s, None, length=NCHUNK)
+            # tail remainder (Poisson spikes, outage recovery, kill
+            # re-pends) — chunked so carry copies stay few
+            s = lax.while_loop(
+                disp_cond, lambda s: disp_chunk(s, None)[0], s
+            )
+
+            # -- 4) completions (every entry with finish <= t) ----------
+            fin = s["run_fin"]
+            done = fin <= t
+            idxs = s["run_idx"]
+            e2e_v = (fin - arr[idxs]) + rtt[
+                jnp.arange(R)[:, None], rcode[idxs]
+            ]
+            scat = jnp.where(done, idxs, N).ravel()
+            verdict = jnp.where(e2e_v > timeout, 2, 1).astype(jnp.int8)
+            status = st["status"].at[scat].set(verdict.ravel())
+            e2e = st["e2e"].at[scat].set(e2e_v.ravel())
+            order = jnp.argsort(done.astype(jnp.int8), axis=1,
+                                stable=True)         # keep start order
+            s["run_fin"] = jnp.take_along_axis(
+                jnp.where(done, jnp.inf, fin), order, axis=1
+            )
+            s["run_idx"] = jnp.take_along_axis(idxs, order, axis=1)
+            s["run_n"] = s["run_n"] - done.sum(axis=1)
+
+            # -- 5) queue expiry (RTT-inclusive; O(R) guard per step,
+            #       one whole slot cleared per iteration) ---------------
+            if expire_on:
+                q_age_c = s["q_age"]     # append-only within this stage
+
+                def exp_cond(e):
+                    hit = (e["q_cnt"] > 0) & (t - e["qmin"] > timeout)
+                    return hit.any()
+
+                def exp_body(e):
+                    hit = (e["q_cnt"] > 0) & (t - e["qmin"] > timeout)
+                    slot = jnp.argmax(hit)
+                    vrow = e["q_valid"][slot]
+                    drop = vrow & (t - q_age_c[slot] > timeout)
+                    nv = vrow & ~drop
+                    ages = jnp.where(nv, q_age_c[slot], jnp.inf)
+                    e = dict(e)
+                    e["q_valid"] = e["q_valid"].at[slot].set(nv)
+                    e["q_cnt"] = e["q_cnt"].at[slot].set(nv.sum())
+                    e["qmin"] = e["qmin"].at[slot].set(ages.min())
+                    return e
+
+                sub = {k: s[k] for k in ("q_valid", "q_cnt", "qmin")}
+                s.update(lax.while_loop(exp_cond, exp_body, sub))
+
+            # -- 6) starts (drain queues into freed capacity) -----------
+            def start_body(s, act):
+                can = ready & (s["run_n"] < C) & (s["q_cnt"] > 0)
+                act = act & can.any()
+                slot = jnp.argmax(can)
+                seqs = jnp.where(
+                    s["q_valid"][slot], s["q_seq"][slot], _BIG_I
+                )
+                j = jnp.argmin(seqs)
+                i = s["q_idx"][slot, j]
+                rn = s["run_n"][slot]
+                rn_c = jnp.minimum(rn, C - 1)
+                fin_t = t + svc[i] * (1.0 + 0.15 * rn)
+                s = dict(s)
+                s["run_fin"] = s["run_fin"].at[slot, rn_c].set(
+                    jnp.where(act, fin_t, s["run_fin"][slot, rn_c])
+                )
+                s["run_idx"] = s["run_idx"].at[slot, rn_c].set(
+                    jnp.where(act, i, s["run_idx"][slot, rn_c])
+                )
+                s["run_n"] = s["run_n"].at[slot].add(act)
+                s["q_valid"] = s["q_valid"].at[slot, j].set(
+                    s["q_valid"][slot, j] & (~act)
+                )
+                s["q_cnt"] = s["q_cnt"].at[slot].add(
+                    jnp.where(act, -1, 0)
+                )
+                ages = jnp.where(s["q_valid"][slot], s["q_age"][slot],
+                                 jnp.inf)
+                s["qmin"] = s["qmin"].at[slot].set(
+                    jnp.where(act, ages.min(), s["qmin"][slot])
+                )
+                return s
+
+            def start_cond(s):
+                can = ready & (s["run_n"] < C) & (s["q_cnt"] > 0)
+                return can.any()
+
+            def start_chunk(s, _):
+                for _k in range(_UNROLL):
+                    s = start_body(s, jnp.bool_(True))
+                return s, None
+
+            s, _ = lax.scan(start_chunk, s, None, length=NCHUNK)
+            s = lax.while_loop(
+                start_cond, lambda s: start_chunk(s, None)[0], s
+            )
+
+            st = dict(st)
+            st.update(s)
+            st["status"] = status
+            st["e2e"] = e2e
+            return st, None
+
+        st, _ = lax.scan(step, st0, (ts, gs, wins))
+        return {
+            "status": st["status"][:N],
+            "e2e": st["e2e"][:N],
+            "a_ptr": st["a_ptr"],
+            "run_n": st["run_n"],
+            "q_cnt": st["q_cnt"],
+            "n_retried": st["n_retried"],
+            "overflow": st["overflow"],
+        }
+
+    return jax.jit(
+        jax.vmap(
+            lane,
+            in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None, None, None),
+        )
+    )
+
+
+def get_kernel(key: KernelKey):
+    """Compile-once cache: cells sharing a static signature share one
+    XLA program (the vmap batch width is a traced dimension per call)."""
+    k = _KERNELS.get(key)
+    if k is None:
+        k = _KERNELS[key] = _build_kernel(key)
+    return k
+
+
+def run_group(
+    key: KernelKey,
+    lanes: Dict[str, np.ndarray],
+    ts: np.ndarray,
+    gs: np.ndarray,
+    wins: np.ndarray,
+) -> Dict[str, np.ndarray]:
+    """Run one shape group: ``lanes`` holds the stacked per-cell tensors
+    (leading axis = cell), grid arrays are shared across the batch.
+    Returns host-side numpy outputs keyed like the lane dict above."""
+    kern = get_kernel(key)
+    # trace, compile and execute under x64 (the jit cache keys on the
+    # flag, so every call sees one consistent dtype world)
+    with enable_x64():
+        out = kern(
+            jnp.asarray(lanes["arr"]),
+            jnp.asarray(lanes["svc"]),
+            jnp.asarray(lanes["rcode"]),
+            jnp.asarray(lanes["rtt"]),
+            jnp.asarray(lanes["ready"]),
+            jnp.asarray(lanes["kill_slot"]),
+            jnp.asarray(lanes["kill_g"]),
+            jnp.asarray(lanes["timeout"]),
+            jnp.asarray(ts),
+            jnp.asarray(gs),
+            jnp.asarray(wins),
+        )
+        return {k2: np.asarray(v) for k2, v in out.items()}

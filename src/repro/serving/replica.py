@@ -19,6 +19,7 @@ import enum
 import heapq
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.cluster.catalog import region_rtt_ms
 from repro.cluster.instance import Instance
 from repro.serving.latency import LatencyModel
 from repro.workloads.arrivals import Request
@@ -115,7 +116,12 @@ class Replica:
         if self.timeout_s > 0:
             fresh = []
             for q in self.queue:
-                if now - q.arrival_s > self.timeout_s:
+                # RTT-inclusive deadline: the response cannot reach the
+                # client before arrival + timeout once
+                # now - arrival + rtt > timeout — the same check applied
+                # to completed responses in the engines
+                rtt = region_rtt_ms(q.client_region, self.region) / 1e3
+                if now - q.arrival_s + rtt > self.timeout_s:
                     expired.append(q)
                 else:
                     fresh.append(q)

@@ -90,8 +90,13 @@ class ContinuousBatch:
     def __init__(self, cfg: TokenEngineConfig) -> None:
         self.cfg = cfg
         self.now = 0.0
-        # admission queue: (key, prompt, out, arrival_s, enqueued_s)
-        self.queue: Deque[Tuple[int, int, int, float, float]] = deque()
+        # admission queue:
+        # (key, prompt, out, arrival_s, enqueued_s, rtt_s) — rtt_s is the
+        # client's network round-trip to THIS replica, folded into the
+        # queue-expiry deadline so queued and completed requests face the
+        # same RTT-inclusive timeout
+        self.queue: Deque[Tuple[int, int, int, float, float, float]] = \
+            deque()
         self.reserved_tokens = 0        # sum(prompt+out) over active seqs
         self.completed = 0
         self._keys = _EMPTY_I
@@ -129,7 +134,7 @@ class ContinuousBatch:
         """KV tokens spoken for: active reservations plus what the
         admission queue will claim — a migration target's used budget."""
         return self.reserved_tokens + sum(
-            p + o for _, p, o, _, _ in self.queue
+            p + o for _, p, o, _, _, _ in self.queue
         )
 
     def iter_states(self) -> List[
@@ -151,8 +156,8 @@ class ContinuousBatch:
         cfg = self.cfg
         rem_dec = int((self._out - self._dec).sum())
         rem_pref = int((self._prompt - self._pref).sum())
-        q_pref = sum(p for _, p, _, _, _ in self.queue)
-        q_dec = sum(o for _, _, o, _, _ in self.queue)
+        q_pref = sum(p for _, p, _, _, _, _ in self.queue)
+        q_dec = sum(o for _, _, o, _, _, _ in self.queue)
         b = max(self.n_active, 1)
         # decode tokens of concurrent sequences overlap (one iteration
         # serves the whole batch); queued work runs after them
@@ -164,20 +169,26 @@ class ContinuousBatch:
 
     # -- request path ---------------------------------------------------
     def enqueue(self, key: int, prompt_tokens: int, output_tokens: int,
-                arrival_s: float, enqueued_s: float) -> bool:
+                arrival_s: float, enqueued_s: float,
+                rtt_s: float = 0.0) -> bool:
         """Queue a request for admission.  Returns False when the request
-        can *never* fit the KV budget (caller should fail it)."""
+        can *never* fit the KV budget (caller should fail it).
+        ``rtt_s`` is the client↔replica round-trip, counted against the
+        queue-expiry deadline (see :meth:`expire_queue`)."""
         p = max(1, int(prompt_tokens))
         o = max(1, int(output_tokens))
         if p + o > self.cfg.kv_budget_tokens:
             return False
-        self.queue.append((key, p, o, float(arrival_s), float(enqueued_s)))
+        self.queue.append(
+            (key, p, o, float(arrival_s), float(enqueued_s), float(rtt_s))
+        )
         return True
 
     def enqueue_migrated(
         self, key: int, prompt_tokens: int, output_tokens: int,
         arrival_s: float, enqueued_s: float,
         prefilled: int, decoded: int, first_s: float,
+        rtt_s: float = 0.0,
     ) -> bool:
         """Queue a migrated-in sequence.  Its KV cache (``prefilled +
         decoded`` tokens) survived the move, so admission seeds progress
@@ -194,19 +205,22 @@ class ContinuousBatch:
             int(prefilled), int(decoded), float(first_s)
         )
         self.queue.append(
-            (int(key), p, o, float(arrival_s), float(enqueued_s))
+            (int(key), p, o, float(arrival_s), float(enqueued_s),
+             float(rtt_s))
         )
         return True
 
     def expire_queue(self, t: float, timeout_s: float) -> List[int]:
-        """Drop admission-queue entries whose client gave up (wall-clock
-        ``t`` is past ``arrival + timeout``).  Returns their keys."""
+        """Drop admission-queue entries whose client gave up: the
+        response cannot reach the client before ``arrival + timeout``
+        once ``t - arrival + rtt > timeout`` — the same RTT-inclusive
+        deadline applied to completed responses.  Returns their keys."""
         if not self.queue:
             return []
         expired: List[int] = []
-        kept: Deque[Tuple[int, int, int, float, float]] = deque()
+        kept: Deque[Tuple[int, int, int, float, float, float]] = deque()
         for entry in self.queue:
-            if t - entry[3] > timeout_s:
+            if t - entry[3] + entry[5] > timeout_s:
                 expired.append(entry[0])
             else:
                 kept.append(entry)
@@ -283,7 +297,7 @@ class ContinuousBatch:
         cfg = self.cfg
         q = self.queue
         while q:
-            key, p, o, arr, enq = q[0]
+            key, p, o, arr, enq, _ = q[0]
             if len(self._keys) >= cfg.max_batch:
                 break
             if self.reserved_tokens + p + o > cfg.kv_budget_tokens:
@@ -412,7 +426,7 @@ class ContinuousBatch:
             t_eff = t
             join_wait = False
             if self.queue and b < cfg.max_batch:
-                key, p, o, arr, enq = self.queue[0]
+                key, p, o, arr, enq, _ = self.queue[0]
                 if (self.reserved_tokens + p + o <= cfg.kv_budget_tokens
                         and enq < t):
                     cap = max(self.now, min(t, enq))

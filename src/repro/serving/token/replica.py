@@ -18,6 +18,7 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
+from repro.cluster.catalog import region_rtt_ms
 from repro.cluster.instance import Instance
 from repro.serving.latency import LatencyModel
 from repro.serving.replica import Replica, ReplicaState
@@ -63,6 +64,7 @@ class TokenReplica(Replica):
         ok = self.batch.enqueue(
             req.id, req.prompt_tokens, req.output_tokens,
             req.arrival_s, now,
+            rtt_s=region_rtt_ms(req.client_region, self.region) / 1e3,
         )
         if ok:
             self._by_key[req.id] = req

@@ -11,6 +11,14 @@ same commit (the diff then documents the metric shift).
 The spec runs the default engine ("vector"); the differential suite
 (tests/test_differential.py) guarantees the legacy simulator produces
 the same numbers.
+
+Timeout-semantics note: queue expiry became RTT-inclusive
+(``t - arrival + rtt > timeout``, matching the deadline long applied to
+completed responses).  The constants below were re-verified after that
+change and are *unchanged*: these cells serve same-geo clients whose RTT
+is 2 ms, and no queued request sits within 2 ms of the 60 s timeout
+boundary at any expiry check.  Cross-region scenarios (where the unified
+deadline does shift counts) are covered in tests/test_jax_engine.py.
 """
 
 import dataclasses
