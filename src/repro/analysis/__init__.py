@@ -1,0 +1,46 @@
+"""repro.analysis — repo-aware static invariant checker.
+
+AST-driven lint framework encoding this repository's bug history as
+enforceable rules: engine-parity (spec fields honored by every serving
+engine), determinism (no repr/id/hash keys, unseeded RNGs, wall clocks,
+or raw set iteration in the deterministic core), tracing-hazard (no
+backend queries or tracer concretization inside jitted/pallas bodies),
+silent-fallback (degraded paths must emit counters), and spec-drift
+(every spec field loaded, built, and demonstrated in an example).
+
+Run it: ``python -m repro.analysis [--format json|text] [--rules ...]``.
+Findings are silenced only via ``analysis_exemptions.json`` entries with
+mandatory justifications; the JSON report lands at
+``artifacts/analysis/report.json`` (schema v1).
+"""
+
+from repro.analysis.core import (  # noqa: F401
+    Finding,
+    RepoContext,
+    Rule,
+    RULES,
+    register_rule,
+    rule_ids,
+)
+from repro.analysis.exemptions import (  # noqa: F401
+    Exemption,
+    ExemptionError,
+    load_exemptions,
+)
+from repro.analysis.report import AnalysisReport, SCHEMA_VERSION  # noqa: F401
+from repro.analysis.runner import run_analysis  # noqa: F401
+
+__all__ = [
+    "AnalysisReport",
+    "Exemption",
+    "ExemptionError",
+    "Finding",
+    "RepoContext",
+    "Rule",
+    "RULES",
+    "SCHEMA_VERSION",
+    "load_exemptions",
+    "register_rule",
+    "rule_ids",
+    "run_analysis",
+]

@@ -112,7 +112,8 @@ class SpotHedgePolicy(Policy):
     def _select_next_zone(
         self, current_counts: Dict[str, int], now: float
     ) -> str:
-        active = [z for z in self._za if z in set(self._zone_names())]
+        enabled = set(self._zone_names())
+        active = [z for z in self._za if z in enabled]
         if not active:
             # All enabled zones in Z_P — rebalance defensively.
             self._za = list(self._zone_names())

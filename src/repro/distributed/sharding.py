@@ -110,6 +110,12 @@ def _mesh_axis_size(mesh: Mesh, axis: Any) -> int:
 
 _warned: set = set()
 
+#: replication fallbacks observed this process, keyed by
+#: ``(logical axis, mesh axis)`` — counted on every occurrence even
+#: though the log line is deduplicated, so callers can assert a mesh
+#: actually sharded what they expected.
+FALLBACK_COUNTS: Dict[Tuple[Any, Any], int] = {}
+
 
 def logical_to_pspec(
     logical: Sequence[Optional[str]],
@@ -127,6 +133,7 @@ def logical_to_pspec(
             if dim % n != 0:
                 key = (name, axis if not isinstance(axis, list) else
                        tuple(axis), dim, n)
+                FALLBACK_COUNTS[key] = FALLBACK_COUNTS.get(key, 0) + 1
                 if key not in _warned:
                     _warned.add(key)
                     logger.info(

@@ -522,7 +522,7 @@ class ScenarioSuite:
             _effective_tape_key(sc): sc for sc in self.scenarios
             if sc.tape_key is not None
         }
-        for stale in set(_worker_tapes) - set(needed):
+        for stale in sorted(set(_worker_tapes) - set(needed)):
             del _worker_tapes[stale]
         for key, sc in needed.items():
             if key not in _worker_tapes:

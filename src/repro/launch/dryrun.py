@@ -64,13 +64,13 @@ def run_cell(
             print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: {status}")
         return record
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     built = build_step(arch, shape_name, mesh, **(step_kwargs or {}))
     with mesh:
         lowered = built.jitted().lower(*built.abstract_args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()

@@ -71,7 +71,7 @@ def main(argv=None) -> int:
         params, opt_state = restored["params"], restored["opt_state"]
         print(f"[train] resumed from step {start}")
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(start, args.steps):
         batch = make_batch(cfg, args.batch, args.seq, seed=0, step=step)
         params, opt_state, m = step_fn(params, opt_state, batch)
@@ -80,7 +80,8 @@ def main(argv=None) -> int:
                   f"gnorm {float(m['grad_norm']):9.3f}")
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, step + 1, params, opt_state)
-    print(f"[train] {args.steps - start} steps in {time.time()-t0:.1f}s")
+    print(f"[train] {args.steps - start} steps in "
+          f"{time.perf_counter()-t0:.1f}s")
     return 0
 
 

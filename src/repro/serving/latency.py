@@ -28,6 +28,7 @@ from a guessed 0.8 TB/s part).
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import warnings
 from typing import Optional, TYPE_CHECKING
@@ -183,6 +184,11 @@ class ProfiledLatencyModel(LatencyModel):
 
 LATENCY_SOURCES = ("roofline", "profile")
 
+#: profile->roofline fallbacks observed this process, keyed by
+#: ``(model_id, accelerator)`` — warnings scroll away, this does not;
+#: sweeps and tests can assert a run stayed on measured profiles.
+FALLBACK_COUNTS: collections.Counter = collections.Counter()
+
 
 def make_latency_model(
     cfg: ModelConfig,
@@ -217,6 +223,7 @@ def make_latency_model(
     table = load_profiles(path, missing_ok=True)
     entry = table.lookup(model_id, itype.accelerator)
     if entry is None:
+        FALLBACK_COUNTS[(model_id, itype.accelerator)] += 1
         warnings.warn(
             f"latency source 'profile': no profile entry for "
             f"({model_id!r}, {itype.accelerator!r}) under {path!r}; "
