@@ -1,0 +1,119 @@
+"""Observability overhead: the same matrix at detail off/decisions/full.
+
+Runs one policy×trace scenario matrix through the vectorized engine
+three times — observability ``off``, ``decisions`` (the shipped
+default) and ``full`` — and records serial matrix wall-clock to
+``artifacts/bench/obs_overhead.json``.  Cell metrics are asserted
+identical across detail levels first (recording is pure observation;
+the same guarantee tests/test_obs.py pins per-run), so the timing
+comparison is apples-to-apples.  The headline number is the default
+detail's relative overhead, which must stay under the 5% budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from benchmarks.common import emit_csv, save
+from repro.experiments import ScenarioSuite
+from repro.service import spec_from_dict
+from repro.service.spec import ObservabilitySpec
+
+#: default-detail overhead budget (fraction of the detail=off wall-clock)
+BUDGET = 0.05
+
+# cell fields that legitimately differ across detail levels
+_NONMETRIC = ("wall_s", "metrics", "obs_event_counts", "obs_windows")
+
+
+def _base_spec(hours: float):
+    return spec_from_dict({
+        "name": "obs-overhead",
+        "model": "llama3.2-1b",
+        "trace": "aws-1",
+        "resources": {"instance_type": "g5.48xlarge"},
+        "autoscaler": {"kind": "constant", "target": 3},
+        "workload": {"kind": "poisson", "rate_per_s": 0.8, "seed": 3},
+        "sim": {"duration_hours": hours, "timeout_s": 60.0,
+                "concurrency": 2},
+        "sweep": {"policies": ["spothedge", "even_spread"],
+                  "traces": ["aws-1", "gcp-1"]},
+    })
+
+
+def _strip(cells) -> List[Dict]:
+    return [
+        {k: v for k, v in c.to_dict(round_to=None).items()
+         if k not in _NONMETRIC}
+        for c in cells
+    ]
+
+
+def run(hours: float = 8.0, quick: bool = False) -> List[Dict]:
+    trials = 1 if quick else 3
+    if quick:
+        hours = 4.0
+    reports = {}
+    for detail in ("off", "decisions", "full"):
+        spec = dataclasses.replace(
+            _base_spec(hours),
+            observability=ObservabilitySpec(detail=detail),
+        )
+        suite = ScenarioSuite.from_spec(spec)
+        # min over trials: wall-clock on shared machines is noisy upward
+        reports[detail] = min(
+            (suite.run(workers=1) for _ in range(trials)),
+            key=lambda r: r.wall_s,
+        )
+
+    base = reports["off"]
+    for detail in ("decisions", "full"):
+        if _strip(base.cells) != _strip(reports[detail].cells):
+            raise AssertionError(
+                f"observability detail {detail!r} changed cell metrics — "
+                "recording must be pure observation"
+            )
+
+    rows: List[Dict] = []
+    for detail in ("decisions", "full"):
+        rep = reports[detail]
+        overhead = rep.wall_s / base.wall_s - 1.0
+        rows.append({
+            "metric": "obs_matrix_overhead",
+            "detail": detail,
+            "hours": hours,
+            "n_cells": len(rep),
+            "off_wall_s": round(base.wall_s, 3),
+            "wall_s": round(rep.wall_s, 3),
+            "overhead_frac": round(overhead, 4),
+            "n_events": sum(
+                sum((c.obs_event_counts or {}).values())
+                for c in rep.cells
+            ),
+            "metrics_identical": True,
+            "budget_frac": BUDGET,
+            "within_budget": overhead < BUDGET,
+        })
+
+    default_row = rows[0]
+    if not default_row["within_budget"]:
+        raise AssertionError(
+            f"default observability detail costs "
+            f"{default_row['overhead_frac']:.1%} matrix wall-clock — "
+            f"over the {BUDGET:.0%} budget"
+        )
+
+    save("obs_overhead", rows)
+    emit_csv("obs_overhead", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--hours", type=float, default=8.0)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(hours=args.hours, quick=args.quick)

@@ -15,7 +15,9 @@ Flagged:
   object, or structured record (heuristic: the handler body contains a
   ``warn``/``warning``/``log`` call but no assignment/aug-assignment/
   method call whose target name smells like telemetry — ``*count*``,
-  ``*stats*``, ``*metric*``, ``*record*``, ``*fallback*``, ``*event*``);
+  ``*stats*``, ``*metric*``, ``*record*``, ``*fallback*``, ``*event*``,
+  ``*registry*`` — the run-scoped ``repro.obs.registry`` counters
+  qualify);
 * a bare ``except:`` or ``except Exception:`` whose body is only
   ``pass``/``continue``/``return <const>`` — the error is swallowed with
   no trace at all (``raise`` / logging / telemetry in the body clears
@@ -47,7 +49,7 @@ SCAN_DIRS: Tuple[str, ...] = (
 
 _LOG_CALL = re.compile(r"(^|\.)((warn(ing)?)|log|error|info|debug)$")
 _TELEMETRY = re.compile(
-    r"(count|stats|metric|record|fallback|event|telemetry)", re.I
+    r"(count|stats|metric|record|fallback|event|telemetry|registry)", re.I
 )
 _FALLBACK_MSG = re.compile(r"fall(ing|s|en)?[\s_-]*back", re.I)
 
@@ -125,9 +127,9 @@ def _handler_findings(path: str, tree: ast.AST) -> List[Finding]:
                             "counter or structured event — warnings "
                             "scroll away; sweeps need a measurable "
                             "fallback signal",
-                    hint="increment a module-level fallback counter or "
-                         "append to a metrics record alongside the "
-                         "warning",
+                    hint="bump a run-scoped counter alongside the warning "
+                         "(repro.obs.registry: get_registry().inc(...)) "
+                         "or append a structured record",
                 ))
     return out
 
@@ -184,9 +186,9 @@ def _warn_fallback_findings(path: str, tree: ast.AST) -> List[Finding]:
                 message=f"{node.name!r} announces a fallback in a warning "
                         "but records no counter or structured event — the "
                         "degraded run is invisible to sweeps and CI",
-                hint="increment a module-level fallback counter (e.g. a "
-                     "collections.Counter keyed by site) next to the "
-                     "warning",
+                hint="bump a run-scoped fallback counter next to the "
+                     "warning (repro.obs.registry: "
+                     "get_registry().inc(...))",
             ))
     return out
 

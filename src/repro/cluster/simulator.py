@@ -41,6 +41,14 @@ from repro.core.policy import (
     Policy,
     Terminate,
 )
+from repro.obs.events import (
+    AutoscalerTargetEvent,
+    LaunchFailureEvent,
+    PolicyDecisionEvent,
+    PreemptionWarningEvent,
+    ReplicaLifecycleEvent,
+)
+from repro.obs.recorder import ObsRecorder
 
 
 @dataclasses.dataclass
@@ -110,6 +118,10 @@ class ClusterSimulator:
         # hook called each tick AFTER state transitions, BEFORE policy
         # decisions — the serving simulator uses it to pump requests.
         tick_hook: Optional[Callable[[float, "ClusterSimulator"], None]] = None,
+        # observability recorder; all engines tap the control plane here,
+        # which is what makes their event streams byte-identical.  A bare
+        # cluster run defaults to a disabled recorder.
+        obs: Optional[ObsRecorder] = None,
     ) -> None:
         self.trace = trace
         self.policy = policy
@@ -118,6 +130,7 @@ class ClusterSimulator:
         self.config = config or SimConfig()
         self.rng = np.random.default_rng(self.config.seed)
         self.tick_hook = tick_hook
+        self.obs = obs if obs is not None else ObsRecorder(detail="off")
 
         zone_names = list(zones) if zones is not None else list(trace.zones)
         missing = [z for z in zone_names if z not in trace.zones]
@@ -238,6 +251,10 @@ class ClusterSimulator:
             if in_use + 1 > cap:
                 self.n_launch_failures += 1
                 self._emit(EventKind.LAUNCH_FAILURE, zone_name)
+                if self.obs.enabled:
+                    self.obs.emit(LaunchFailureEvent(
+                        t=self.now, zone=zone_name, kind="spot"
+                    ))
                 return None
             price = self.catalog.spot_price(self.config.itype, zone_name)
             self.n_spot_launches += 1
@@ -257,6 +274,15 @@ class ClusterSimulator:
             cold_start_s=self.config.cold_start_s,
         )
         self.instances.append(inst)
+        if self.obs.enabled:
+            self.obs.emit(ReplicaLifecycleEvent(
+                t=self.now,
+                phase="provision",
+                instance_id=self.obs.replica_ordinal(inst.id),
+                zone=zone_name,
+                kind="spot" if kind is InstanceKind.SPOT else "ondemand",
+                hourly_price=price,
+            ))
         return inst
 
     def _apply_trace(self, k: Optional[int] = None) -> None:
@@ -289,8 +315,19 @@ class ClusterSimulator:
                 inst.preempt(self.now)
                 self.n_preemptions += 1
                 self._emit(EventKind.PREEMPTION, zone_name, inst.id)
+                # preempt listeners may emit migration events for the
+                # grace window that just ended, so the "dead" record
+                # comes after them in the log
                 for fn in self._preempt_listeners:
                     fn(inst, self.now)
+                if self.obs.enabled:
+                    self.obs.emit(ReplicaLifecycleEvent(
+                        t=self.now,
+                        phase="dead",
+                        instance_id=self.obs.replica_ordinal(inst.id),
+                        zone=zone_name,
+                        cause="preemption",
+                    ))
                 self._retire(inst)
 
     def _resolve_warn_info(self) -> Dict[str, Tuple[float, float]]:
@@ -338,6 +375,10 @@ class ClusterSimulator:
                         if inst.warned_at is None:
                             inst.warned_at = self.now
                     self._emit(EventKind.WARNING, zone_name)
+                    if self.obs.enabled:
+                        self.obs.emit(PreemptionWarningEvent(
+                            t=self.now, zone=zone_name
+                        ))
             return
         now_row = self.trace.capacity_row(self.now)
         for zone_name in self.zone_names:
@@ -351,6 +392,10 @@ class ClusterSimulator:
                         if inst.warned_at is None:
                             inst.warned_at = self.now
                     self._emit(EventKind.WARNING, zone_name)
+                    if self.obs.enabled:
+                        self.obs.emit(PreemptionWarningEvent(
+                            t=self.now, zone=zone_name
+                        ))
 
     def _retire(self, inst: Instance) -> None:
         """Move a dead instance out of the scan list; bank its cost."""
@@ -372,20 +417,72 @@ class ClusterSimulator:
                 if inst.is_ready() and not was_ready:
                     if inst.is_spot():
                         self._emit(EventKind.READY, inst.zone, inst.id)
+                    if self.obs.enabled:
+                        self.obs.emit(ReplicaLifecycleEvent(
+                            t=self.now,
+                            phase="ready",
+                            instance_id=self.obs.replica_ordinal(inst.id),
+                            zone=inst.zone,
+                        ))
                     for fn in self._ready_listeners:
                         fn(inst, self.now)
 
     def _execute(self, actions) -> None:
         by_id = {i.id: i for i in self.instances}
-        for act in actions:
+        # the policy's per-action reasons pair with actions by index
+        # (policies that note nothing yield an empty list -> all None)
+        reasons = self.policy.take_reasons()
+        obs_on = self.obs.enabled
+        for idx, act in enumerate(actions):
+            reason = reasons[idx] if idx < len(reasons) else None
             if isinstance(act, LaunchSpot):
-                self._launch(InstanceKind.SPOT, act.zone)
+                inst = self._launch(InstanceKind.SPOT, act.zone)
+                if obs_on:
+                    self.obs.emit(PolicyDecisionEvent(
+                        t=self.now,
+                        action="launch_spot",
+                        zone=act.zone,
+                        instance_id=(
+                            None if inst is None
+                            else self.obs.replica_ordinal(inst.id)
+                        ),
+                        reason=reason,
+                    ))
             elif isinstance(act, LaunchOnDemand):
-                self._launch(InstanceKind.ON_DEMAND, act.zone)
+                inst = self._launch(InstanceKind.ON_DEMAND, act.zone)
+                if obs_on:
+                    self.obs.emit(PolicyDecisionEvent(
+                        t=self.now,
+                        action="launch_ondemand",
+                        zone=act.zone,
+                        instance_id=(
+                            None if inst is None
+                            else self.obs.replica_ordinal(inst.id)
+                        ),
+                        reason=reason,
+                    ))
             elif isinstance(act, Terminate):
                 inst = by_id.get(act.instance_id)
+                if obs_on:
+                    self.obs.emit(PolicyDecisionEvent(
+                        t=self.now,
+                        action="terminate",
+                        zone=None if inst is None else inst.zone,
+                        instance_id=self.obs.replica_ordinal(
+                            act.instance_id
+                        ),
+                        reason=reason,
+                    ))
                 if inst is not None and inst.is_active():
                     inst.terminate(self.now)
+                    if obs_on:
+                        self.obs.emit(ReplicaLifecycleEvent(
+                            t=self.now,
+                            phase="dead",
+                            instance_id=self.obs.replica_ordinal(inst.id),
+                            zone=inst.zone,
+                            cause="terminate",
+                        ))
                     for fn in self._terminate_listeners:
                         fn(inst, self.now)
                     self._retire(inst)
@@ -421,6 +518,7 @@ class ClusterSimulator:
         ok_ticks = 0
         self._precompute(dt, ticks)
 
+        prev_target: Optional[int] = None
         for k in range(ticks):
             self.now = k * dt
             self._k = k
@@ -430,6 +528,11 @@ class ClusterSimulator:
             if self.tick_hook is not None:
                 self.tick_hook(self.now, self)
             n_target = self.autoscaler.target(self.now)
+            if self.obs.enabled and n_target != prev_target:
+                self.obs.emit(AutoscalerTargetEvent(
+                    t=self.now, target=n_target, prev_target=prev_target
+                ))
+            prev_target = n_target
             obs = self._observation(n_target)
             self._execute(self.policy.decide(obs))
             # metrics AFTER actions so cold starts are charged immediately

@@ -140,6 +140,9 @@ class Policy:
         self._catalog: Optional["Catalog"] = None
         self._itype: str = ""
         self._fail_at: Dict[str, float] = {}
+        # machine-readable decision reasons, one per action appended in
+        # the current decide() call (repro.obs pairs them by index)
+        self._reasons: List[Optional[Dict[str, object]]] = []
 
     # -- lifecycle -----------------------------------------------------
     def reset(
@@ -188,6 +191,35 @@ class Policy:
     # -- the decision --------------------------------------------------
     def decide(self, obs: Observation) -> List[Action]:
         raise NotImplementedError
+
+    # -- decision reasons (observability) ------------------------------
+    def _note(self, **reason: object) -> None:
+        """Record the machine-readable *reason* for the action the policy
+        is about to (or just did) append in ``decide``.
+
+        Reasons pair with actions by position: call ``_note`` exactly
+        once per appended action, in the same order.  Noting is pure
+        bookkeeping — it must never draw RNG or change decisions, so
+        golden metrics are identical whether or not anyone reads the
+        reasons.
+        """
+        reasons = getattr(self, "_reasons", None)
+        if reasons is None:  # subclass skipped Policy.__init__
+            reasons = self._reasons = []
+        reasons.append(dict(reason))
+
+    def take_reasons(self) -> List[Optional[Dict[str, object]]]:
+        """Drain the reasons noted during the last ``decide`` call.
+
+        The controller calls this after every ``decide``; policies that
+        never ``_note`` yield an empty list (reasons default to None).
+        """
+        reasons = getattr(self, "_reasons", None)
+        if not reasons:
+            return []
+        out = list(reasons)
+        reasons.clear()
+        return out
 
     # -- shared helpers ---------------------------------------------------
     def _zone_names(self) -> List[str]:

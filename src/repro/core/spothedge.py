@@ -169,6 +169,13 @@ class SpotHedgePolicy(Policy):
                 alt = dict(counts)
                 alt[zone] = alt.get(zone, 0) + 10_000  # de-prioritize
                 zone = self._select_next_zone(alt, obs.now)
+            self._note(
+                why="fill_spot_buffer",
+                spot_goal=spot_goal,
+                s_launched=obs.s_launched,
+                zone_spot_count=counts.get(zone, 0),
+                zone_rank=self._zone_rank_key(zone, obs.now),
+            )
             actions.append(LaunchSpot(zone))
             counts[zone] = counts.get(zone, 0) + 1
             launched_this_tick[zone] = launched_this_tick.get(zone, 0) + 1
@@ -181,6 +188,12 @@ class SpotHedgePolicy(Policy):
                 obs.spot_provisioning, key=lambda i: -i.launched_at
             ) + sorted(obs.spot_ready, key=lambda i: -i.launched_at)
             for inst in pool[:surplus]:
+                self._note(
+                    why="shrink_spot_buffer",
+                    spot_goal=spot_goal,
+                    s_launched=obs.s_launched,
+                    surplus=surplus,
+                )
                 actions.append(Terminate(inst.id))
 
         # 3) Dynamic Fallback: O(t) = min(N_Tar, N_Tar + N_Extra - S_r)
@@ -204,9 +217,24 @@ class SpotHedgePolicy(Policy):
         if gap > 0:
             zone = self._cheapest_od_zone()
             for _ in range(gap):
+                self._note(
+                    why="od_fallback",
+                    od_needed=od_needed,
+                    s_r=obs.s_r,
+                    at_risk_ready=obs.s_r - s_r_eff,
+                    n_target=n_tar,
+                )
                 actions.append(LaunchOnDemand(zone))
         elif gap < 0:
-            actions.extend(self._scale_down_od(obs, od_needed))
+            od_terms = self._scale_down_od(obs, od_needed)
+            for _ in od_terms:
+                self._note(
+                    why="shrink_od_fallback",
+                    od_needed=od_needed,
+                    o_launched=obs.o_launched,
+                    s_r=obs.s_r,
+                )
+            actions.extend(od_terms)
         return actions
 
     # -- at-risk accounting (overridden by the risk-aware subclass) --------

@@ -23,7 +23,7 @@ parallelizes).  This fallback is logged once per (axis, size) pair.
 from __future__ import annotations
 
 import logging
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Sequence
 
 import jax
 import numpy as np
@@ -110,12 +110,6 @@ def _mesh_axis_size(mesh: Mesh, axis: Any) -> int:
 
 _warned: set = set()
 
-#: replication fallbacks observed this process, keyed by
-#: ``(logical axis, mesh axis)`` — counted on every occurrence even
-#: though the log line is deduplicated, so callers can assert a mesh
-#: actually sharded what they expected.
-FALLBACK_COUNTS: Dict[Tuple[Any, Any], int] = {}
-
 
 def logical_to_pspec(
     logical: Sequence[Optional[str]],
@@ -133,7 +127,19 @@ def logical_to_pspec(
             if dim % n != 0:
                 key = (name, axis if not isinstance(axis, list) else
                        tuple(axis), dim, n)
-                FALLBACK_COUNTS[key] = FALLBACK_COUNTS.get(key, 0) + 1
+                # run-scoped counter (repro.obs): counted on every
+                # occurrence even though the log line is deduplicated,
+                # so callers can assert a mesh actually sharded what
+                # they expected without cross-run bleed
+                from repro.obs.registry import get_registry
+
+                get_registry().inc(
+                    "sharding_replication_fallback",
+                    axis=str(name),
+                    mesh_axis=str(key[1]),
+                    dim=dim,
+                    size=n,
+                )
                 if key not in _warned:
                     _warned.add(key)
                     logger.info(

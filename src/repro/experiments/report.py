@@ -85,6 +85,12 @@ class CellResult:
     saved_prefill_tokens: Optional[int] = None
     n_retried_requests: Optional[int] = None
     lost_kv_tokens: Optional[int] = None
+    # observability (repro.obs) — picklable snapshots so process-parallel
+    # sweep workers carry them back to the parent; omitted when the cell
+    # ran with detail "off" (or recorded nothing)
+    metrics: Optional[Dict[str, Any]] = None
+    obs_event_counts: Optional[Dict[str, int]] = None
+    obs_windows: Optional[List[Dict[str, Any]]] = None
 
     @staticmethod
     def from_result(
@@ -122,6 +128,14 @@ class CellResult:
             saved_prefill_tokens=tok.saved_prefill_tokens if tok else None,
             n_retried_requests=res.n_retried_requests if tok else None,
             lost_kv_tokens=res.lost_kv_tokens if tok else None,
+            metrics=res.metrics,
+            obs_event_counts=(
+                res.obs.event_counts() if res.obs is not None else None
+            ),
+            obs_windows=(
+                res.obs.window_records() or None
+                if res.obs is not None else None
+            ),
         )
 
     @property
@@ -152,6 +166,10 @@ class ScenarioReport:
     workers: int
     cells: List[CellResult]
     wall_s: float
+    # suite-level metrics: every cell's registry snapshot merged
+    # (repro.obs.MetricsRegistry.merge_snapshots); None when no cell
+    # recorded any
+    metrics: Optional[Dict[str, Any]] = None
 
     # -- access ----------------------------------------------------------
     def __len__(self) -> int:
@@ -166,7 +184,7 @@ class ScenarioReport:
 
     # -- serialization ---------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        out = {
             "schema": SCHEMA_VERSION,
             "suite": self.suite,
             "engine": self.engine,
@@ -175,6 +193,9 @@ class ScenarioReport:
             "n_cells": len(self.cells),
             "cells": [c.to_dict() for c in self.cells],
         }
+        if self.metrics is not None:
+            out["metrics"] = self.metrics
+        return out
 
     def save(self, directory: str = os.path.join("artifacts", "bench"),
              stem: Optional[str] = None) -> str:

@@ -428,12 +428,19 @@ class ScenarioSuite:
         else:
             cells = self._run_parallel(n_workers, engine, progress)
         wall = time.perf_counter() - t0
+        # merge every cell's registry snapshot (cells from parallel
+        # workers carry theirs back through the picklable CellResult)
+        from repro.obs.registry import MetricsRegistry
+
+        snaps = [c.metrics for c in cells if c.metrics]
         report = ScenarioReport(
             suite=self.name,
             engine=engine or self._engine_label(),
             workers=n_workers,
             cells=cells,
             wall_s=wall,
+            metrics=MetricsRegistry.merge_snapshots(snaps) or None
+            if snaps else None,
         )
         if save_to is not None:
             report.save(save_to)

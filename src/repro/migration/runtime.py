@@ -15,11 +15,13 @@ identical by construction.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.cluster.catalog import link_bandwidth_gbps
 from repro.migration.config import MigrationSpec
 from repro.migration.planner import SeqState, TargetInfo, plan_preemption
+from repro.obs.events import MigrationPlanEvent, ReplicaLifecycleEvent
+from repro.obs.recorder import ObsRecorder
 
 __all__ = ["MigratedSeq", "PreemptionOutcome", "MigrationRuntime"]
 
@@ -59,13 +61,21 @@ class PreemptionOutcome:
 class MigrationRuntime:
     """Plans and executes grace-period KV migration for one engine run."""
 
-    def __init__(self, spec: MigrationSpec, engine_cfg) -> None:
+    def __init__(
+        self,
+        spec: MigrationSpec,
+        engine_cfg,
+        obs: Optional[ObsRecorder] = None,
+    ) -> None:
         if not spec.enabled:
             raise ValueError(
                 "MigrationRuntime requires migration.enabled: true"
             )
         self.spec = spec
         self.engine_cfg = engine_cfg    # TokenEngineConfig (duck-typed)
+        # events derive solely from inputs + the pure planner's outcome,
+        # so both engines emit identical streams through here
+        self.obs = obs if obs is not None else ObsRecorder(detail="off")
 
     # ------------------------------------------------------------------
     def bandwidth_bytes_per_s(self, src_inst, dst_inst) -> float:
@@ -139,6 +149,33 @@ class MigrationRuntime:
             m.state.decoded for m in migrated
         )
         cfg = self.engine_cfg
+        if self.obs.enabled:
+            # lifecycle phases precede the cluster's "dead" event: the
+            # engine runs inside the preempt listener, and the cluster
+            # emits death only after all listeners return
+            src_ord = self.obs.replica_ordinal(src_inst.id)
+            if drained:
+                self.obs.emit(ReplicaLifecycleEvent(
+                    t=now, phase="draining",
+                    instance_id=src_ord, zone=src_inst.zone,
+                ))
+            if migrated:
+                self.obs.emit(ReplicaLifecycleEvent(
+                    t=now, phase="migrating",
+                    instance_id=src_ord, zone=src_inst.zone,
+                ))
+            self.obs.emit(MigrationPlanEvent(
+                t=now,
+                instance_id=src_ord,
+                n_drained=len(drained),
+                n_migrated=len(migrated),
+                n_killed=kr.n_batch + kr.n_queued,
+                migrated_kv_tokens=sum(
+                    m.state.resident_tokens for m in migrated
+                ),
+                transfer_s=sum(m.transfer_s for m in migrated),
+                grace_s=grace_s,
+            ))
         return PreemptionOutcome(
             drained=tuple(drained),
             migrated=tuple(migrated),

@@ -22,6 +22,8 @@ from repro.configs import get_config
 from repro.core.autoscaler import Autoscaler, ConstantTarget, LoadAutoscaler
 from repro.core.policy import Policy, make_policy, policy_class
 from repro.models.config import ModelConfig
+from repro.obs.recorder import ObsRecorder
+from repro.obs.registry import use_registry
 from repro.serving.latency import make_latency_model
 from repro.serving.load_balancer import (
     LeastLoadedBalancer,
@@ -164,6 +166,9 @@ class ResolvedService:
     # ServingSimulator, VectorizedServingEngine or JaxServingEngine,
     # per spec.sim.engine
     simulator: "ServingSimulator | VectorizedServingEngine"
+    # the run's shared event recorder + metrics registry, built from the
+    # spec's observability: section (detail / window_s)
+    obs: Optional[ObsRecorder] = None
 
 
 def build_service(
@@ -208,14 +213,21 @@ def build_service(
         engine_cls = JaxServingEngine
     else:
         engine_cls = VectorizedServingEngine
-    model_cfg = get_config(spec.model)
-    latency_model = make_latency_model(
-        model_cfg,
-        catalog.instance_type(spec.resources.instance_type),
-        model_id=spec.model,
-        source=spec.latency.source,
-        profile=spec.latency.profile,
+    obs = ObsRecorder(
+        detail=spec.observability.detail,
+        window_s=spec.observability.window_s,
     )
+    model_cfg = get_config(spec.model)
+    # run-scope the registry so factory-level counters (e.g. the
+    # profile-fallback) land on this run's obs, not a process global
+    with use_registry(obs.registry):
+        latency_model = make_latency_model(
+            model_cfg,
+            catalog.instance_type(spec.resources.instance_type),
+            model_id=spec.model,
+            source=spec.latency.source,
+            profile=spec.latency.profile,
+        )
     serving = spec.serving
     # migration only exists at token granularity; request-model cells of
     # a mixed replica_models sweep run without it (the status quo)
@@ -260,6 +272,7 @@ def build_service(
             replica_model=sim_spec.replica_model,
             token_scheduler=token_knobs,
             migration=migration,
+            obs=obs,
         )
     except TypeError as e:
         # the array engines reject configurations they cannot simulate
@@ -279,4 +292,5 @@ def build_service(
         load_balancer=lb,
         requests=reqs,
         simulator=simulator,
+        obs=obs,
     )

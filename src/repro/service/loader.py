@@ -20,6 +20,7 @@ from repro.service.spec import (
     ForecastSpec,
     LatencySpec,
     MigrationSpec,
+    ObservabilitySpec,
     PlacementFilter,
     ReplicaPolicySpec,
     ResourceSpec,
@@ -234,7 +235,7 @@ def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
         d,
         ("name", "model", "trace", "resources", "replica_policy",
          "autoscaler", "workload", "latency", "forecast", "serving",
-         "migration", "sim", "load_balancer", "sweep"),
+         "observability", "migration", "sim", "load_balancer", "sweep"),
         "service spec",
     )
     try:
@@ -263,6 +264,13 @@ def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
         kw["serving"], serving_rm = _serving_from_dict(
             _section(d, "serving")
         )
+        if d.get("observability") is not None:
+            # observability: detail / out_dir / jsonl / chrome_trace /
+            # window_s — see ObservabilitySpec
+            kw["observability"] = ObservabilitySpec(
+                **_pick(_section(d, "observability"), ObservabilitySpec,
+                        "observability")
+            )
         if d.get("migration") is not None:
             kw["migration"] = _migration_from_dict(
                 _section(d, "migration"), "migration"

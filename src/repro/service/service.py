@@ -46,6 +46,8 @@ class Service:
         self._resolved: Optional[ResolvedService] = None
         self._resolved_unused = False   # resolved but not yet run
         self.result: Optional[ServingResult] = None
+        # artifact paths written by the last run (detail "full" only)
+        self.artifacts: Dict[str, str] = {}
 
     # -- constructors ------------------------------------------------------
     @classmethod
@@ -89,7 +91,34 @@ class Service:
         self.result = resolved.simulator.run(
             duration_s if duration_s is not None else self.spec.sim.duration_s
         )
+        self._export_obs(resolved)
         return self.result
+
+    def _export_obs(self, resolved: ResolvedService) -> None:
+        """At observability detail ``full``, write the run's artifacts
+        (event JSONL and/or Chrome trace) under ``out_dir``."""
+        spec = self.spec.observability
+        obs = resolved.obs
+        if obs is None or obs.detail != "full":
+            return
+        if not (spec.jsonl or spec.chrome_trace):
+            return
+        import os
+
+        from repro.obs.export import write_chrome_trace, write_jsonl
+
+        os.makedirs(spec.out_dir, exist_ok=True)
+        stem = os.path.join(spec.out_dir, self.spec.name)
+        records = obs.records()
+        self.artifacts = {}
+        if spec.jsonl:
+            self.artifacts["events"] = write_jsonl(
+                records, stem + ".events.jsonl"
+            )
+        if spec.chrome_trace:
+            self.artifacts["trace"] = write_chrome_trace(
+                records, stem + ".trace.json"
+            )
 
     # -- introspection -----------------------------------------------------
     def status(self) -> Dict[str, Any]:
@@ -126,4 +155,8 @@ class Service:
                 p50_s=r.pct(50),
                 p99_s=r.pct(99),
             )
+            if r.obs is not None:
+                out["obs_event_counts"] = r.obs.event_counts()
+            if self.artifacts:
+                out["obs_artifacts"] = dict(self.artifacts)
         return out

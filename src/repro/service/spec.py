@@ -50,6 +50,7 @@ __all__ = [
     "ForecastSpec",
     "SLOSpec",
     "ServingSpec",
+    "ObservabilitySpec",
     "MigrationSpec",
     "SimSpec",
     "SweepSpec",
@@ -524,6 +525,56 @@ class ServingSpec:
 
 
 # ---------------------------------------------------------------------------
+# Observability (repro.obs: event tracing, metrics, artifact export)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ObservabilitySpec:
+    """What the run records and exports (``repro.obs``).
+
+    ``detail`` gates recording cost: ``off`` records nothing,
+    ``decisions`` (default) records control-plane events (policy
+    decisions with reasons, replica lifecycle, preemption warnings,
+    migration plans) plus registry metrics, and ``full`` adds windowed
+    data-plane samples every ``window_s`` seconds and enables artifact
+    export.  At detail ``full`` the :class:`repro.service.Service`
+    facade writes a schema-v1 event log (``jsonl``) and a
+    Perfetto-loadable timeline (``chrome_trace``) under ``out_dir``.
+    Recording never changes metrics — golden results are byte-identical
+    at every detail level.
+    """
+
+    detail: str = "decisions"
+    out_dir: str = "artifacts/obs"
+    jsonl: bool = True
+    chrome_trace: bool = True
+    window_s: float = 60.0
+
+    def __post_init__(self) -> None:
+        # single source of truth for valid levels is the obs layer
+        # (deferred import keeps spec module import cheap)
+        from repro.obs.recorder import DETAIL_LEVELS
+
+        _require(
+            self.detail in DETAIL_LEVELS,
+            f"observability.detail must be one of {list(DETAIL_LEVELS)}, "
+            f"got {self.detail!r}",
+        )
+        _require(
+            bool(self.out_dir),
+            "observability.out_dir must be a non-empty path",
+        )
+        _require(
+            self.window_s > 0,
+            f"observability.window_s must be positive, got {self.window_s}",
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
 # Simulation horizon / fabric knobs
 # ---------------------------------------------------------------------------
 
@@ -764,6 +815,9 @@ class ServiceSpec:
     latency: LatencySpec = dataclasses.field(default_factory=LatencySpec)
     forecast: Optional[ForecastSpec] = None
     serving: ServingSpec = dataclasses.field(default_factory=ServingSpec)
+    observability: ObservabilitySpec = dataclasses.field(
+        default_factory=ObservabilitySpec
+    )
     migration: Optional[MigrationSpec] = None
     sim: SimSpec = dataclasses.field(default_factory=SimSpec)
     load_balancer: str = "least_loaded"
@@ -869,6 +923,7 @@ class ServiceSpec:
             "workload": self.workload.to_dict(),
             "latency": self.latency.to_dict(),
             "serving": self.serving.to_dict(),
+            "observability": self.observability.to_dict(),
             "sim": self.sim.to_dict(),
             "load_balancer": self.load_balancer,
         }

@@ -59,13 +59,15 @@ from repro.cluster.traces import SpotTrace
 from repro.core.autoscaler import Autoscaler, ConstantTarget
 from repro.core.policy import Policy
 from repro.models.config import ModelConfig
+from repro.obs.recorder import ObsRecorder
+from repro.obs.registry import use_registry
 from repro.serving.latency import LatencyModel
 from repro.serving.load_balancer import (
     LeastLoadedBalancer,
     LoadBalancer,
     RoundRobinBalancer,
 )
-from repro.serving.sim import REPLICA_MODELS, ServingResult
+from repro.serving.sim import REPLICA_MODELS, ServingResult, WindowSampler
 from repro.serving.token.batch import ContinuousBatch
 from repro.serving.token.config import (
     TokenEngineConfig,
@@ -135,7 +137,13 @@ class VectorizedServingEngine:
         replica_model: str = "request",
         token_scheduler: Optional[TokenSchedulerConfig] = None,
         migration: Optional[MigrationSpec] = None,
+        obs: Optional[ObsRecorder] = None,
     ) -> None:
+        # shared event recorder (repro.obs): the cluster, migration
+        # runtime and window sampler all emit into this one sink, so the
+        # stream is byte-identical to the legacy simulator's
+        self.obs = obs if obs is not None else ObsRecorder()
+        self._win = WindowSampler(self.obs)
         self.catalog = catalog or default_catalog()
         self.cfg = cfg
         self.itype = self.catalog.instance_type(itype)
@@ -178,7 +186,7 @@ class VectorizedServingEngine:
                 "migration.enabled requires replica_model='token'"
             )
         self._mig_rt: Optional[MigrationRuntime] = (
-            MigrationRuntime(migration, self._token_cfg)
+            MigrationRuntime(migration, self._token_cfg, obs=self.obs)
             if migration is not None and migration.enabled
             and self._token_cfg is not None else None
         )
@@ -287,6 +295,7 @@ class VectorizedServingEngine:
             autoscaler=autoscaler or ConstantTarget(4),
             config=cfg_sim,
             tick_hook=self._tick,
+            obs=self.obs,
         )
         self.cluster.add_preempt_listener(self._on_dead)
         self.cluster.add_terminate_listener(self._on_dead)
@@ -499,6 +508,17 @@ class VectorizedServingEngine:
         if self._obs:
             self._observe_batch(self._obs)
             self._obs.clear()
+        self._win.maybe_emit(
+            now,
+            delivered=self._ptr,
+            completed=self.completed,
+            failed=self.failed,
+            instances=cluster.instances,
+            token_records=(
+                self._token_records if self._token_cfg is not None
+                else None
+            ),
+        )
 
     def _process(self, t: float, cluster: ClusterSimulator) -> None:
         # 1) arrivals
@@ -923,7 +943,10 @@ class VectorizedServingEngine:
 
     # ------------------------------------------------------------------
     def run(self, duration_s: Optional[float] = None) -> ServingResult:
-        base = self.cluster.run(duration_s)
+        # run-scope the metrics registry so library-level counters
+        # (e.g. latency-model fallbacks) land on this run, not a global
+        with use_registry(self.obs.registry):
+            base = self.cluster.run(duration_s)
         # drain: anything still pending/in-flight past the horizon fails
         self.failed += len(self._pending)
         for rep in self._reps:
@@ -970,4 +993,6 @@ class VectorizedServingEngine:
             lost_kv_tokens=(
                 self._lost_prefill_tokens + self._lost_decode_tokens
             ),
+            metrics=self.obs.registry.snapshot() or None,
+            obs=self.obs if self.obs.enabled else None,
         )

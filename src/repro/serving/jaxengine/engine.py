@@ -27,10 +27,12 @@ Scope and guarantees:
 from __future__ import annotations
 
 import copy
+import dataclasses
 from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.registry import use_registry
 from repro.serving.engine import VectorizedServingEngine, _Rep
 from repro.serving.jaxengine.schedule import (
     CellSchedule,
@@ -112,7 +114,11 @@ class JaxServingEngine(VectorizedServingEngine):
         dur = float(duration_s or self.cluster.trace.duration_s)
         grid = build_grid(dur, dt, self.sub_step_s)
         self._rec = ScheduleRecorder(grid, self._arr)
-        base = self.cluster.run(duration_s)
+        # phase A is the real control plane: the cluster's obs taps emit
+        # the same decision/lifecycle events as the other engines (no
+        # window samples — this tick override never runs the sampler)
+        with use_registry(self.obs.registry):
+            base = self.cluster.run(duration_s)
         ready, rtt, kill_slot, kill_g, post = self._rec.control_arrays(
             len(self._reps),
             [r.rtt for r in self._reps],
@@ -147,15 +153,19 @@ class JaxServingEngine(VectorizedServingEngine):
     ) -> ServingResult:
         """Oracle rerun from pristine control-plane state (overflow)."""
         p = self._pristine
+        kw = {
+            k: (copy.deepcopy(v) if k in ("autoscaler", "lb") else v)
+            for k, v in p["kw"].items()
+        }
+        # fresh recorder: the rerun replays the whole control plane, and
+        # sharing this engine's recorder would double-record phase A
+        kw["obs"] = self.obs.fresh()
         eng = VectorizedServingEngine(
             p["trace"],
             copy.deepcopy(p["policy"]),
             p["requests"],
             p["cfg"],
-            **{
-                k: (copy.deepcopy(v) if k in ("autoscaler", "lb") else v)
-                for k, v in p["kw"].items()
-            },
+            **kw,
         )
         return eng.run(duration_s)
 
@@ -363,6 +373,14 @@ def run_cells(
         for i, res in zip(jax_idx, run_schedules(scheds,
                                                  queue_capacity=cap)):
             if res is None:     # queue pool overflow → oracle rerun
+                # the rerun's own recorder rides on its result
                 res = engines[i]._fallback_run(durations[i])
+            else:
+                obs = engines[i].obs
+                res = dataclasses.replace(
+                    res,
+                    metrics=obs.registry.snapshot() or None,
+                    obs=obs if obs.enabled else None,
+                )
             results[i] = res
     return results

@@ -28,7 +28,6 @@ from a guessed 0.8 TB/s part).
 
 from __future__ import annotations
 
-import collections
 import dataclasses
 import warnings
 from typing import Optional, TYPE_CHECKING
@@ -184,12 +183,6 @@ class ProfiledLatencyModel(LatencyModel):
 
 LATENCY_SOURCES = ("roofline", "profile")
 
-#: profile->roofline fallbacks observed this process, keyed by
-#: ``(model_id, accelerator)`` — warnings scroll away, this does not;
-#: sweeps and tests can assert a run stayed on measured profiles.
-FALLBACK_COUNTS: collections.Counter = collections.Counter()
-
-
 def make_latency_model(
     cfg: ModelConfig,
     itype: InstanceType,
@@ -223,7 +216,17 @@ def make_latency_model(
     table = load_profiles(path, missing_ok=True)
     entry = table.lookup(model_id, itype.accelerator)
     if entry is None:
-        FALLBACK_COUNTS[(model_id, itype.accelerator)] += 1
+        # run-scoped counter (repro.obs): warnings scroll away, this
+        # lands on the calling run's registry — sweeps and tests can
+        # assert a run stayed on measured profiles without cross-run
+        # bleed from a process-global tally
+        from repro.obs.registry import get_registry
+
+        get_registry().inc(
+            "latency_profile_fallback",
+            model=model_id,
+            accelerator=itype.accelerator,
+        )
         warnings.warn(
             f"latency source 'profile': no profile entry for "
             f"({model_id!r}, {itype.accelerator!r}) under {path!r}; "

@@ -25,12 +25,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.cluster.catalog import Catalog, default_catalog
-from repro.cluster.instance import Instance, InstanceState
+from repro.cluster.instance import Instance, InstanceKind, InstanceState
 from repro.migration.config import MigrationSpec
 from repro.migration.runtime import MigrationRuntime
 from repro.cluster.simulator import ClusterSimulator, SimConfig
@@ -38,6 +38,9 @@ from repro.cluster.traces import SpotTrace
 from repro.core.autoscaler import Autoscaler, ConstantTarget
 from repro.core.policy import Policy
 from repro.models.config import ModelConfig
+from repro.obs.events import WindowSampleEvent
+from repro.obs.recorder import ObsRecorder
+from repro.obs.registry import use_registry
 from repro.serving.latency import LatencyModel
 from repro.serving.load_balancer import LeastLoadedBalancer, LoadBalancer
 from repro.serving.replica import Replica, ReplicaState
@@ -50,6 +53,75 @@ from repro.serving.token.replica import TokenReplica
 from repro.workloads.arrivals import Request
 
 REPLICA_MODELS = ("request", "token")
+
+
+class WindowSampler:
+    """Windowed data-plane sampling (observability detail ``full``).
+
+    Both serving engines drive this one code path with order-independent
+    inputs (cumulative counters + instantaneous cluster state at the
+    control-tick boundary), which is what makes their window samples —
+    and therefore their whole event JSONL — byte-identical.
+    """
+
+    def __init__(self, obs: ObsRecorder) -> None:
+        self.obs = obs
+        self._next_t = 0.0
+        self._last_t = 0.0
+        self._last_completed = 0
+        self._records_seen = 0
+
+    def maybe_emit(
+        self,
+        now: float,
+        *,
+        delivered: int,
+        completed: int,
+        failed: int,
+        instances: Sequence[Instance],
+        token_records: Optional[Sequence[TokenRecord]] = None,
+    ) -> None:
+        if not self.obs.wants_windows or now < self._next_t:
+            return
+        n_ready = n_spot = n_od = 0
+        cost_per_h = 0.0
+        for inst in instances:
+            cost_per_h += inst.hourly_price
+            if inst.state is InstanceState.READY:
+                n_ready += 1
+                if inst.kind is InstanceKind.SPOT:
+                    n_spot += 1
+                else:
+                    n_od += 1
+        elapsed = now - self._last_t
+        delta = completed - self._last_completed
+        goodput = delta / elapsed if elapsed > 0 else 0.0
+        ttft_p50: Optional[float] = None
+        if token_records is not None:
+            new = token_records[self._records_seen:]
+            self._records_seen = len(token_records)
+            if new:
+                # median over the window's completion multiset: order-
+                # independent, so engine-internal completion order
+                # differences cannot leak into the sample
+                ttft_p50 = float(np.median(sorted(
+                    r.ttft_s for r in new
+                )))
+        self.obs.emit_window(WindowSampleEvent(
+            t=now,
+            queue_depth=delivered - completed - failed,
+            n_ready=n_ready,
+            n_spot=n_spot,
+            n_od=n_od,
+            cost_per_h=cost_per_h,
+            n_completed=completed,
+            n_failed=failed,
+            goodput_rps=goodput,
+            ttft_p50_s=ttft_p50,
+        ))
+        self._last_t = now
+        self._last_completed = completed
+        self._next_t = now + self.obs.window_s
 
 
 @dataclasses.dataclass
@@ -75,6 +147,10 @@ class ServingResult:
     # and KV tokens destroyed doing so (always 0 in request mode)
     n_retried_requests: int = 0
     lost_kv_tokens: int = 0
+    # observability (repro.obs): the run's metrics-registry snapshot and
+    # the recorder holding the typed event stream (None when detail=off)
+    metrics: Optional[Dict[str, Any]] = None
+    obs: Optional[ObsRecorder] = None
 
     @property
     def failure_rate(self) -> float:
@@ -123,8 +199,11 @@ class ServingSimulator:
         replica_model: str = "request",
         token_scheduler: Optional[TokenSchedulerConfig] = None,
         migration: Optional[MigrationSpec] = None,
+        obs: Optional[ObsRecorder] = None,
     ) -> None:
         self.catalog = catalog or default_catalog()
+        self.obs = obs if obs is not None else ObsRecorder()
+        self._win = WindowSampler(self.obs)
         self.cfg = cfg
         self.itype = self.catalog.instance_type(itype)
         # an injected model (e.g. ProfiledLatencyModel from the spec's
@@ -165,7 +244,7 @@ class ServingSimulator:
                 "migration.enabled requires replica_model='token'"
             )
         self._mig_rt: Optional[MigrationRuntime] = (
-            MigrationRuntime(migration, self._token_cfg)
+            MigrationRuntime(migration, self._token_cfg, obs=self.obs)
             if migration is not None and migration.enabled
             and self._token_cfg is not None else None
         )
@@ -200,6 +279,7 @@ class ServingSimulator:
             autoscaler=autoscaler or ConstantTarget(4),
             config=cfg_sim,
             tick_hook=self._tick,
+            obs=self.obs,
         )
         self.cluster.add_preempt_listener(self._on_dead)
         # scale-downs retire instances from the cluster's scan list, so the
@@ -379,10 +459,24 @@ class ServingSimulator:
             self._dispatch(t)
             self._step_replicas(t)
             t += self.sub_step_s
+        self._win.maybe_emit(
+            now,
+            delivered=self._next_arrival,
+            completed=self.completed,
+            failed=self.failed,
+            instances=cluster.instances,
+            token_records=(
+                self._token_records if self._token_cfg is not None
+                else None
+            ),
+        )
 
     # ------------------------------------------------------------------
     def run(self, duration_s: Optional[float] = None) -> ServingResult:
-        base = self.cluster.run(duration_s)
+        # run-scope the metrics registry so library-level counters
+        # (e.g. latency-model fallbacks) land on this run, not a global
+        with use_registry(self.obs.registry):
+            base = self.cluster.run(duration_s)
         # drain: anything still pending/in-flight past the horizon fails
         self.failed += len(self.pending)
         for rep in self.replicas.values():
@@ -430,4 +524,6 @@ class ServingSimulator:
             lost_kv_tokens=(
                 self._lost_prefill_tokens + self._lost_decode_tokens
             ),
+            metrics=self.obs.registry.snapshot() or None,
+            obs=self.obs if self.obs.enabled else None,
         )
