@@ -24,7 +24,8 @@ from repro.service.spec import ObservabilitySpec
 BUDGET = 0.05
 
 # cell fields that legitimately differ across detail levels
-_NONMETRIC = ("wall_s", "metrics", "obs_event_counts", "obs_windows")
+_NONMETRIC = ("wall_s", "metrics", "obs_event_counts", "obs_windows",
+              "slo_burn", "n_spans")
 
 
 def _base_spec(hours: float):

@@ -91,6 +91,10 @@ class CellResult:
     metrics: Optional[Dict[str, Any]] = None
     obs_event_counts: Optional[Dict[str, int]] = None
     obs_windows: Optional[List[Dict[str, Any]]] = None
+    # SLO burn-rate summary + sampled-span count (repro.obs.slo /
+    # repro.obs.spans); present only at detail "full"
+    slo_burn: Optional[Dict[str, Any]] = None
+    n_spans: Optional[int] = None
 
     @staticmethod
     def from_result(
@@ -134,6 +138,14 @@ class CellResult:
             ),
             obs_windows=(
                 res.obs.window_records() or None
+                if res.obs is not None else None
+            ),
+            slo_burn=(
+                res.obs.slo_burn_summary()
+                if res.obs is not None else None
+            ),
+            n_spans=(
+                len(res.obs.span_records()) or None
                 if res.obs is not None else None
             ),
         )
@@ -182,6 +194,22 @@ class ScenarioReport:
             if all(c.labels.get(k) == v for k, v in labels.items())
         ]
 
+    def burn_ranking(self) -> List[CellResult]:
+        """Cells with a burn summary, worst error-budget burn first.
+
+        Ranks by time spent alerting, then by alert-window count — the
+        cell a paging SLO would flag first.  Cells that ran below detail
+        ``full`` (no burn windows) are omitted.
+        """
+        burned = [c for c in self.cells if c.slo_burn]
+        return sorted(
+            burned,
+            key=lambda c: (
+                -float(c.slo_burn.get("alert_minutes", 0.0)),
+                -int(c.slo_burn.get("alert_windows", 0)),
+            ),
+        )
+
     # -- serialization ---------------------------------------------------
     def to_dict(self) -> Dict[str, Any]:
         out = {
@@ -221,4 +249,14 @@ class ScenarioReport:
                 f"cost={c.cost_vs_ondemand:6.2%} "
                 f"avail={c.availability:.2%} [{c.wall_s:.2f}s]"
             )
+        burned = self.burn_ranking()
+        if burned:
+            lines.append("  SLO burn (worst first):")
+            for c in burned:
+                b = c.slo_burn
+                lines.append(
+                    f"    {c.cell_id:<42s} "
+                    f"alert={b['alert_minutes']:6.1f}min "
+                    f"({b['alert_windows']}/{b['windows']} windows)"
+                )
         return "\n".join(lines)

@@ -442,6 +442,15 @@ class ScenarioSuite:
             metrics=MetricsRegistry.merge_snapshots(snaps) or None
             if snaps else None,
         )
+        if progress:
+            # surface paging-worthy cells (detail "full" only) as they
+            # would reach an operator: worst error-budget burn first
+            for c in report.burn_ranking():
+                b = c.slo_burn
+                if b["alert_windows"]:
+                    print(f"[suite {self.name}] SLO burn alert: "
+                          f"{c.cell_id} {b['alert_minutes']:.1f}min "
+                          f"over {b['alert_windows']} windows", flush=True)
         if save_to is not None:
             report.save(save_to)
         return report

@@ -119,6 +119,9 @@ class MigrationRuntime:
         drained: List[SeqState] = []
         migrated: List[MigratedSeq] = []
         removed: List[int] = []
+        # span taps ride the source batch's sampled-key map; consult it
+        # before remove()/kill() evict the entries below
+        tord = getattr(src_batch, "_tord", None)
         for d in decisions:
             s = d.state
             if d.action == "drain":
@@ -137,6 +140,20 @@ class MigrationRuntime:
                         transfer_s=d.transfer_s, resume_s=resume,
                     ))
                     removed.append(s.key)
+                    if tord:
+                        o = tord.get(s.key)
+                        if o is not None:
+                            to_ord = self.obs.replica_ordinal(
+                                d.target_rid
+                            )
+                            src_batch.tap.migrate(
+                                o, now, to_replica=to_ord,
+                                transfer_s=d.transfer_s, plan_t=now,
+                            )
+                            src_batch.tap.migrate_arrive(
+                                o, resume, replica=to_ord
+                            )
+                            bmap[d.target_rid].track(s.key, o)
                 # else: planner headroom said yes but the target refused
                 # (over-large request) — falls through to the kill path
         if removed:

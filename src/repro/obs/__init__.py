@@ -37,6 +37,7 @@ from repro.obs.events import (
     PolicyDecisionEvent,
     PreemptionWarningEvent,
     ReplicaLifecycleEvent,
+    SLOBurnEvent,
     WindowSampleEvent,
     control_plane_records,
 )
@@ -55,6 +56,13 @@ from repro.obs.registry import (
     get_registry,
     use_registry,
 )
+from repro.obs.slo import (
+    SLOBurnConfig,
+    SLOBurnMonitor,
+    burn_summary,
+    burn_table,
+)
+from repro.obs.spans import SpanCollector, span_sampled
 
 __all__ = [
     "SCHEMA_VERSION",
@@ -66,9 +74,16 @@ __all__ = [
     "PreemptionWarningEvent",
     "LaunchFailureEvent",
     "WindowSampleEvent",
+    "SLOBurnEvent",
     "AutoscalerTargetEvent",
     "control_plane_records",
     "ObsRecorder",
+    "SLOBurnConfig",
+    "SLOBurnMonitor",
+    "burn_summary",
+    "burn_table",
+    "SpanCollector",
+    "span_sampled",
     "MetricsRegistry",
     "get_registry",
     "use_registry",

@@ -6,10 +6,14 @@
     python -m repro.obs diff a.jsonl b.jsonl
     python -m repro.obs attribute run.jsonl --top 5
     python -m repro.obs trace run.jsonl -o run.trace.json
+    python -m repro.obs request run.spans.jsonl 0
+    python -m repro.obs slo run.jsonl
 
 ``summarize``/``diff``/``attribute`` print human-readable text by
 default and structured JSON with ``--json``; ``trace`` writes a
-Perfetto-loadable Chrome-trace file.
+Perfetto-loadable Chrome-trace file.  ``request`` renders one sampled
+request's span as a waterfall (pass the ``.spans.jsonl`` artifact);
+``slo`` renders the run's SLO burn-rate windows as a table.
 """
 
 from __future__ import annotations
@@ -58,7 +62,11 @@ def _cmd_diff(args: argparse.Namespace) -> int:
 
 
 def _cmd_attribute(args: argparse.Namespace) -> int:
-    rep = attribution_report(read_jsonl(args.log), top=args.top)
+    rep = attribution_report(
+        read_jsonl(args.log),
+        top=args.top,
+        spans=read_jsonl(args.spans) if args.spans else None,
+    )
     if args.json:
         print(json.dumps(rep, indent=1, sort_keys=True))
         return 0
@@ -88,6 +96,66 @@ def _cmd_attribute(args: argparse.Namespace) -> int:
             print(f"    {cause:<16} {n}")
     elif fr["note"]:
         print(f"  failed requests: {fr['note']}")
+    rs = rep.get("request_spans")
+    if rs:
+        print(f"  sampled request spans ({rs['n_spans']}): "
+              f"{rs['n_retried']} retried, {rs['n_migrated']} migrated")
+        for name, sec in rs["seconds_by_segment"].items():
+            print(f"    {name:<10} {sec:>12.3f}s")
+    return 0
+
+
+def _cmd_request(args: argparse.Namespace) -> int:
+    rec = next(
+        (r for r in read_jsonl(args.log)
+         if r.get("event") == "span"
+         and int(r.get("ordinal", -1)) == args.ordinal),
+        None,
+    )
+    if rec is None:
+        print(f"no span record for ordinal {args.ordinal} "
+              f"in {args.log} (is trace_sample high enough?)")
+        return 1
+    if args.json:
+        print(json.dumps(rec, indent=1, sort_keys=True))
+        return 0
+    segs = rec.get("segments") or []
+    t0 = float(rec["arrival_s"])
+    t1 = max((float(s["t1_s"]) for s in segs), default=t0)
+    span = max(t1 - t0, 1e-9)
+    width = 40
+    print(f"request #{rec['ordinal']}: outcome={rec['outcome']} "
+          f"attempts={rec['attempts']} arrival={t0:.3f}s"
+          + (f" e2e={rec['e2e_s']:.3f}s" if "e2e_s" in rec else ""))
+    for s in segs:
+        a, b = float(s["t0_s"]), float(s["t1_s"])
+        lo = int((a - t0) / span * width)
+        hi = max(int((b - t0) / span * width), lo + 1)
+        bar = " " * lo + "#" * (hi - lo)
+        extra = ",".join(
+            f"{k}={v}" for k, v in sorted(s.items())
+            if k not in ("name", "t0_s", "t1_s")
+        )
+        print(f"  {s['name']:<9} |{bar:<{width}}| "
+              f"{a:11.3f}s -> {b:11.3f}s ({b - a:8.3f}s)"
+              + (f"  {extra}" if extra else ""))
+    return 0
+
+
+def _cmd_slo(args: argparse.Namespace) -> int:
+    from repro.obs.slo import burn_summary, burn_table
+
+    records = read_jsonl(args.log)
+    if args.json:
+        print(json.dumps(
+            {"summary": burn_summary(records)}, indent=1, sort_keys=True
+        ))
+        return 0
+    print(burn_table(records))
+    s = burn_summary(records)
+    if s is not None:
+        print(f"alerting {s['alert_windows']}/{s['windows']} windows "
+              f"({s['alert_minutes']:.1f} min)")
     return 0
 
 
@@ -121,6 +189,8 @@ def main(argv: List[str] | None = None) -> int:
     )
     p.add_argument("log")
     p.add_argument("--top", type=int, default=10)
+    p.add_argument("--spans", default=None,
+                   help="span log (.spans.jsonl) to extend the ledger")
     p.add_argument("--json", action="store_true")
     p.set_defaults(fn=_cmd_attribute)
 
@@ -130,6 +200,22 @@ def main(argv: List[str] | None = None) -> int:
     p.add_argument("log")
     p.add_argument("-o", "--out", default=None)
     p.set_defaults(fn=_cmd_trace)
+
+    p = sub.add_parser(
+        "request",
+        help="waterfall of one sampled request (span log + ordinal)",
+    )
+    p.add_argument("log")
+    p.add_argument("ordinal", type=int)
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_request)
+
+    p = sub.add_parser(
+        "slo", help="SLO burn-rate windows of one event log"
+    )
+    p.add_argument("log")
+    p.add_argument("--json", action="store_true")
+    p.set_defaults(fn=_cmd_slo)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -40,13 +40,67 @@ def _records(events: Iterable[Recordish]) -> List[Dict[str, Any]]:
     return out
 
 
+#: span segments a request spends *waiting* in (vs being served)
+_WAIT_SEGS = ("queue", "rqueue", "admit", "transfer")
+
+
+def _span_section(spans: Iterable[Mapping[str, Any]]) -> Dict[str, Any]:
+    """Aggregate request-span records into a where-time-goes ledger."""
+    n = 0
+    outcomes: Dict[str, int] = {}
+    seg_s: Dict[str, float] = {}
+    waits: List[float] = []
+    retried = migrated = 0
+    for rec in spans:
+        n += 1
+        oc = str(rec.get("outcome", "unresolved"))
+        outcomes[oc] = outcomes.get(oc, 0) + 1
+        if int(rec.get("attempts", 1)) > 1:
+            retried += 1
+        wait = 0.0
+        hop = False
+        for s in rec.get("segments") or []:
+            dur = max(float(s["t1_s"]) - float(s["t0_s"]), 0.0)
+            name = str(s["name"])
+            seg_s[name] = seg_s.get(name, 0.0) + dur
+            if name in _WAIT_SEGS:
+                wait += dur
+            hop = hop or name == "transfer"
+        migrated += hop
+        waits.append(wait)
+    waits.sort()
+    p95 = waits[min(int(0.95 * len(waits)), len(waits) - 1)] \
+        if waits else None
+    return {
+        "n_spans": n,
+        "outcomes": {k: outcomes[k] for k in sorted(outcomes)},
+        "n_retried": retried,
+        "n_migrated": migrated,
+        "seconds_by_segment": {
+            k: round(seg_s[k], 6) for k in sorted(seg_s)
+        },
+        "wait_mean_s": (
+            round(sum(waits) / len(waits), 6) if waits else None
+        ),
+        "wait_p95_s": round(p95, 6) if p95 is not None else None,
+    }
+
+
 def attribution_report(
     events: Iterable[Recordish],
     *,
     horizon_s: Optional[float] = None,
     top: int = 10,
+    spans: Optional[Iterable[Mapping[str, Any]]] = None,
 ) -> Dict[str, Any]:
-    """Render the decision-attribution ledger for one event stream."""
+    """Render the decision-attribution ledger for one event stream.
+
+    Pass ``spans`` (schema-v1 request-span records) to extend the
+    ledger with a ``request_spans`` section: per-outcome counts,
+    seconds charged to each span segment (where sampled requests spend
+    their time), and queueing-wait aggregates.
+    """
+    span_records = list(spans) if spans is not None else None
     records = _records(events)
     if horizon_s is None:
         horizon_s = max(
@@ -197,4 +251,8 @@ def attribution_report(
                 if not windows else None
             ),
         },
+        **(
+            {"request_spans": _span_section(span_records)}
+            if span_records is not None else {}
+        ),
     }

@@ -16,7 +16,7 @@ tests/test_obs.py holds legacy == vector on the serialized bytes).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterable, List, Mapping, Optional
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Tuple
 
 __all__ = [
     "SCHEMA_VERSION",
@@ -27,6 +27,7 @@ __all__ = [
     "PreemptionWarningEvent",
     "LaunchFailureEvent",
     "WindowSampleEvent",
+    "SLOBurnEvent",
     "AutoscalerTargetEvent",
     "LIFECYCLE_PHASES",
     "control_plane_records",
@@ -157,6 +158,35 @@ class WindowSampleEvent(Event):
 
 
 @dataclasses.dataclass(frozen=True)
+class SLOBurnEvent(Event):
+    """Multi-window SLO burn rates at one sample-window boundary.
+
+    Burn = (trailing-window error fraction) / (1 − SLO target); one
+    event per data-plane sample window (detail level ``full``).  A
+    ``None`` burn means no traffic in that trailing window (omitted
+    from the record); ``ttft``/``tpot`` exist only for token-model
+    cells.  ``alerting`` lists SLOs whose fast *and* slow burns both
+    exceed their thresholds (see :class:`repro.obs.slo.SLOBurnConfig`).
+    """
+
+    availability_fast: Optional[float] = None
+    availability_slow: Optional[float] = None
+    ttft_fast: Optional[float] = None
+    ttft_slow: Optional[float] = None
+    tpot_fast: Optional[float] = None
+    tpot_slow: Optional[float] = None
+    alerting: Optional[Tuple[str, ...]] = None
+
+    KIND = "slo_burn"
+
+    def to_record(self) -> Dict[str, Any]:
+        rec = super().to_record()
+        if self.alerting is not None:
+            rec["alerting"] = list(self.alerting)
+        return rec
+
+
+@dataclasses.dataclass(frozen=True)
 class AutoscalerTargetEvent(Event):
     """The autoscaler target changed (includes the initial value)."""
 
@@ -171,13 +201,14 @@ def control_plane_records(
 ) -> List[Dict[str, Any]]:
     """The control-plane subset of a record stream.
 
-    Window samples and migration activity are data-plane products; the
-    JAX engine's phase-A replay reproduces everything else exactly, so
-    this is the stream its parity is tested on.
+    Window samples, burn-rate windows and migration activity are
+    data-plane products; the JAX engine's phase-A replay reproduces
+    everything else exactly, so this is the stream its parity is
+    tested on.
     """
     out: List[Dict[str, Any]] = []
     for r in records:
-        if r.get("event") in ("window", "migration_plan"):
+        if r.get("event") in ("window", "migration_plan", "slo_burn"):
             continue
         if r.get("event") == "lifecycle" and r.get("phase") in (
             "draining", "migrating"

@@ -70,7 +70,11 @@ def _us(t: float) -> float:
     return round(t * 1e6, 3)
 
 
-def chrome_trace(events: Iterable[Recordish]) -> Dict[str, Any]:
+def chrome_trace(
+    events: Iterable[Recordish],
+    spans: Optional[Iterable[Mapping[str, Any]]] = None,
+    token_windows: Optional[Iterable[Mapping[str, Any]]] = None,
+) -> Dict[str, Any]:
     """Records -> a Chrome-trace-event JSON object.
 
     Load the written file in https://ui.perfetto.dev (or
@@ -78,6 +82,13 @@ def chrome_trace(events: Iterable[Recordish]) -> Dict[str, Any]:
     (provisioning -> serving -> grace spans), policy decisions and
     preemption warnings as instant markers, queue depth and fleet $/h
     as counter tracks.
+
+    ``spans`` takes schema-v1 request-span records
+    (``SpanCollector.records()``): each sampled request renders as an
+    outer slice with its segments nested inside, grouped per replica
+    (run ordinal) in a second "requests (sampled)" process.
+    ``token_windows`` takes ``TokenStats.windows`` entries and adds
+    goodput / windowed-SLO-attainment counter tracks.
     """
     records = _as_records(events)
     trace: List[Dict[str, Any]] = [
@@ -206,6 +217,27 @@ def chrome_trace(events: Iterable[Recordish]) -> Dict[str, Any]:
             "dur": _us(max(horizon - span["t0"], 0.0)),
             "name": span["name"], "args": span["args"],
         })
+    if spans is not None:
+        trace.extend(_span_slices(list(spans)))
+    if token_windows is not None:
+        for w in token_windows:
+            if w.get("post_horizon"):
+                continue      # drain bucket: no defined rate
+            t0 = float(w["t0_s"])
+            trace.append({
+                "ph": "C", "pid": 0, "ts": _us(t0),
+                "name": "goodput req/s",
+                "args": {"goodput req/s": w["goodput_rps"]},
+            })
+            done = int(w.get("n_completed", 0))
+            trace.append({
+                "ph": "C", "pid": 0, "ts": _us(t0),
+                "name": "window SLO attainment",
+                "args": {"window SLO attainment": (
+                    round(int(w.get("n_slo_ok", 0)) / done, 6)
+                    if done else 0.0
+                )},
+            })
     return {
         "traceEvents": trace,
         "displayTimeUnit": "ms",
@@ -213,11 +245,76 @@ def chrome_trace(events: Iterable[Recordish]) -> Dict[str, Any]:
     }
 
 
-def write_chrome_trace(events: Iterable[Recordish], path: str) -> str:
+#: pid of the request-span process (keeps replica lifecycle rows clean)
+_SPAN_PID = 1
+
+
+def _span_slices(spans: List[Mapping[str, Any]]) -> List[Dict[str, Any]]:
+    """Request-span records -> nested per-replica Perfetto slices."""
+    out: List[Dict[str, Any]] = [
+        {"ph": "M", "pid": _SPAN_PID, "tid": 0, "name": "process_name",
+         "args": {"name": "requests (sampled)"}},
+    ]
+    named: set = set()
+    for rec in spans:
+        segs = list(rec.get("segments") or [])
+        if not segs:
+            continue
+        # the request rides the track of the first replica that served
+        # it (migration hops stay visible as `transfer` child slices)
+        rep = next(
+            (int(s["replica"]) for s in segs if "replica" in s), -1
+        )
+        tid = rep + 1          # -1 (never dispatched) -> tid 0
+        if tid not in named:
+            named.add(tid)
+            out.append({
+                "ph": "M", "pid": _SPAN_PID, "tid": tid,
+                "name": "thread_name",
+                "args": {"name": (f"replica #{rep}" if rep >= 0
+                                  else "undispatched")},
+            })
+        t0 = float(rec["arrival_s"])
+        t1 = max(float(s["t1_s"]) for s in segs)
+        args = {
+            k: rec[k]
+            for k in ("outcome", "attempts", "rtt_s", "e2e_s",
+                      "first_token_s")
+            if k in rec
+        }
+        out.append({
+            "ph": "X", "pid": _SPAN_PID, "tid": tid,
+            "ts": _us(t0), "dur": _us(max(t1 - t0, 0.0)),
+            "name": f"req #{rec['ordinal']}", "args": args,
+        })
+        for s in segs:
+            sargs = {
+                k: v for k, v in s.items()
+                if k not in ("name", "t0_s", "t1_s")
+            }
+            out.append({
+                "ph": "X", "pid": _SPAN_PID, "tid": tid,
+                "ts": _us(float(s["t0_s"])),
+                "dur": _us(max(float(s["t1_s"]) - float(s["t0_s"]),
+                               0.0)),
+                "name": s["name"], "args": sargs,
+            })
+    return out
+
+
+def write_chrome_trace(
+    events: Iterable[Recordish],
+    path: str,
+    spans: Optional[Iterable[Mapping[str, Any]]] = None,
+    token_windows: Optional[Iterable[Mapping[str, Any]]] = None,
+) -> str:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:
-        json.dump(chrome_trace(events), f, sort_keys=True,
-                  separators=(",", ":"))
+        json.dump(
+            chrome_trace(events, spans=spans,
+                         token_windows=token_windows),
+            f, sort_keys=True, separators=(",", ":"),
+        )
     return path
 
 

@@ -21,10 +21,11 @@ golden metrics are byte-identical at every detail level
 
 from __future__ import annotations
 
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional, Sequence
 
 from repro.obs.events import Event
 from repro.obs.registry import MetricsRegistry
+from repro.obs.slo import SLOBurnConfig, burn_summary
 
 __all__ = ["DETAIL_LEVELS", "ObsRecorder"]
 
@@ -35,7 +36,11 @@ class ObsRecorder:
     """Event sink + metrics registry for one run."""
 
     def __init__(
-        self, detail: str = "decisions", window_s: float = 60.0
+        self,
+        detail: str = "decisions",
+        window_s: float = 60.0,
+        trace_sample: float = 0.01,
+        slo_burn: Optional[SLOBurnConfig] = None,
     ) -> None:
         if detail not in DETAIL_LEVELS:
             raise ValueError(
@@ -44,10 +49,17 @@ class ObsRecorder:
             )
         if window_s <= 0:
             raise ValueError(f"window_s must be > 0, got {window_s}")
+        if not 0.0 <= trace_sample <= 1.0:
+            raise ValueError(
+                f"trace_sample must be in [0, 1], got {trace_sample}"
+            )
         self.detail = detail
         self.window_s = float(window_s)
+        self.trace_sample = float(trace_sample)
+        self.slo_burn = slo_burn if slo_burn is not None else SLOBurnConfig()
         self.events: List[Event] = []
         self.registry = MetricsRegistry()
+        self.spans = None    # SpanCollector, attached by span_collector()
         self._ordinals: Dict[int, int] = {}
 
     def replica_ordinal(self, instance_id: int) -> int:
@@ -81,12 +93,32 @@ class ObsRecorder:
         if self.detail == "full":
             self.events.append(event)
 
+    def span_collector(self, requests: Sequence):
+        """Attach (or return) the run's request-span collector.
+
+        ``None`` when recording is off, sampling is disabled or the
+        tape is empty — engines bind the result once and skip all span
+        taps when it is ``None``.
+        """
+        if not self.enabled or self.trace_sample <= 0.0 or not requests:
+            return None
+        if self.spans is None:
+            from repro.obs.spans import SpanCollector
+
+            self.spans = SpanCollector(self.trace_sample, requests)
+        return self.spans
+
     # ------------------------------------------------------------------
     def fresh(self) -> "ObsRecorder":
         """An empty recorder with the same configuration (the JAX
         engine's oracle fallback re-runs a cell from scratch and must
         not double-record phase-A events)."""
-        return ObsRecorder(detail=self.detail, window_s=self.window_s)
+        return ObsRecorder(
+            detail=self.detail,
+            window_s=self.window_s,
+            trace_sample=self.trace_sample,
+            slo_burn=self.slo_burn,
+        )
 
     def records(self) -> List[Dict[str, Any]]:
         return [e.to_record() for e in self.events]
@@ -99,3 +131,12 @@ class ObsRecorder:
 
     def window_records(self) -> List[Dict[str, Any]]:
         return [e.to_record() for e in self.events if e.KIND == "window"]
+
+    def span_records(self) -> List[Dict[str, Any]]:
+        return self.spans.records() if self.spans is not None else []
+
+    def slo_burn_summary(self) -> Optional[Dict[str, Any]]:
+        """Per-run burn summary (``None`` below detail ``full``)."""
+        return burn_summary(
+            e.to_record() for e in self.events if e.KIND == "slo_burn"
+        )

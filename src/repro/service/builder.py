@@ -24,6 +24,7 @@ from repro.core.policy import Policy, make_policy, policy_class
 from repro.models.config import ModelConfig
 from repro.obs.recorder import ObsRecorder
 from repro.obs.registry import use_registry
+from repro.obs.slo import SLOBurnConfig
 from repro.serving.latency import make_latency_model
 from repro.serving.load_balancer import (
     LeastLoadedBalancer,
@@ -213,9 +214,18 @@ def build_service(
         engine_cls = JaxServingEngine
     else:
         engine_cls = VectorizedServingEngine
+    burn = spec.observability.slo_burn
     obs = ObsRecorder(
         detail=spec.observability.detail,
         window_s=spec.observability.window_s,
+        trace_sample=spec.observability.trace_sample,
+        slo_burn=SLOBurnConfig(
+            target=burn.target,
+            fast_window_s=burn.fast_window_s,
+            slow_window_s=burn.slow_window_s,
+            fast_threshold=burn.fast_threshold,
+            slow_threshold=burn.slow_threshold,
+        ),
     )
     model_cfg = get_config(spec.model)
     # run-scope the registry so factory-level counters (e.g. the

@@ -27,6 +27,7 @@ from repro.service.spec import (
     ServiceSpec,
     ServingSpec,
     SimSpec,
+    SLOBurnSpec,
     SLOSpec,
     SpecError,
     SweepSpec,
@@ -223,6 +224,27 @@ def _serving_from_dict(d: Mapping[str, Any]) -> "tuple[ServingSpec, Any]":
     return ServingSpec(**kw), d.get("replica_model")
 
 
+def _observability_from_dict(d: Mapping[str, Any]) -> ObservabilitySpec:
+    """Build the observability section: detail / out_dir / jsonl /
+    chrome_trace / window_s / trace_sample plus the nested ``slo_burn``
+    mapping (target / fast_window_s / slow_window_s / fast_threshold /
+    slow_threshold — see :class:`SLOBurnSpec`)."""
+    kw: dict = dict(
+        _pick(d, ObservabilitySpec, "observability")
+    )
+    burn = kw.pop("slo_burn", None)
+    if burn is not None:
+        if not isinstance(burn, Mapping):
+            raise SpecError(
+                f"observability.slo_burn must be a mapping, "
+                f"got {type(burn).__name__}"
+            )
+        kw["slo_burn"] = SLOBurnSpec(
+            **_pick(burn, SLOBurnSpec, "observability.slo_burn")
+        )
+    return ObservabilitySpec(**kw)
+
+
 def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
     """Build and validate a :class:`ServiceSpec` from a plain dict."""
     if not isinstance(d, Mapping):
@@ -265,11 +287,8 @@ def spec_from_dict(d: Mapping[str, Any]) -> ServiceSpec:
             _section(d, "serving")
         )
         if d.get("observability") is not None:
-            # observability: detail / out_dir / jsonl / chrome_trace /
-            # window_s — see ObservabilitySpec
-            kw["observability"] = ObservabilitySpec(
-                **_pick(_section(d, "observability"), ObservabilitySpec,
-                        "observability")
+            kw["observability"] = _observability_from_dict(
+                _section(d, "observability")
             )
         if d.get("migration") is not None:
             kw["migration"] = _migration_from_dict(

@@ -110,14 +110,22 @@ class Service:
         os.makedirs(spec.out_dir, exist_ok=True)
         stem = os.path.join(spec.out_dir, self.spec.name)
         records = obs.records()
+        spans = obs.span_records()
+        tok = self.result.token if self.result is not None else None
         self.artifacts = {}
         if spec.jsonl:
             self.artifacts["events"] = write_jsonl(
                 records, stem + ".events.jsonl"
             )
+            if spans:
+                self.artifacts["spans"] = write_jsonl(
+                    spans, stem + ".spans.jsonl"
+                )
         if spec.chrome_trace:
             self.artifacts["trace"] = write_chrome_trace(
-                records, stem + ".trace.json"
+                records, stem + ".trace.json",
+                spans=spans or None,
+                token_windows=tok.windows if tok is not None else None,
             )
 
     # -- introspection -----------------------------------------------------

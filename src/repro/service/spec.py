@@ -50,6 +50,7 @@ __all__ = [
     "ForecastSpec",
     "SLOSpec",
     "ServingSpec",
+    "SLOBurnSpec",
     "ObservabilitySpec",
     "MigrationSpec",
     "SimSpec",
@@ -530,19 +531,61 @@ class ServingSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class SLOBurnSpec:
+    """Burn-rate alerting knobs (``observability.slo_burn``).
+
+    ``target`` is the SLO attainment target whose error budget the
+    burn rates are measured against; ``fast_window_s``/``slow_window_s``
+    are the trailing horizons and ``fast_threshold``/``slow_threshold``
+    the multi-window alert thresholds (SRE-workbook defaults: 5 min at
+    14.4× plus 1 h at 6×).
+    """
+
+    target: float = 0.99
+    fast_window_s: float = 300.0
+    slow_window_s: float = 3600.0
+    fast_threshold: float = 14.4
+    slow_threshold: float = 6.0
+
+    def __post_init__(self) -> None:
+        _require(
+            0.0 < self.target < 1.0,
+            f"observability.slo_burn.target must be in (0, 1), "
+            f"got {self.target}",
+        )
+        _require(
+            0 < self.fast_window_s <= self.slow_window_s,
+            "observability.slo_burn windows must be positive with "
+            "fast_window_s <= slow_window_s",
+        )
+        _require(
+            self.fast_threshold > 0 and self.slow_threshold > 0,
+            "observability.slo_burn thresholds must be positive",
+        )
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
 class ObservabilitySpec:
     """What the run records and exports (``repro.obs``).
 
     ``detail`` gates recording cost: ``off`` records nothing,
     ``decisions`` (default) records control-plane events (policy
     decisions with reasons, replica lifecycle, preemption warnings,
-    migration plans) plus registry metrics, and ``full`` adds windowed
-    data-plane samples every ``window_s`` seconds and enables artifact
-    export.  At detail ``full`` the :class:`repro.service.Service`
-    facade writes a schema-v1 event log (``jsonl``) and a
-    Perfetto-loadable timeline (``chrome_trace``) under ``out_dir``.
-    Recording never changes metrics — golden results are byte-identical
-    at every detail level.
+    migration plans) plus registry metrics and sampled request spans,
+    and ``full`` adds windowed data-plane samples and SLO burn-rate
+    events every ``window_s`` seconds and enables artifact export.  At
+    detail ``full`` the :class:`repro.service.Service` facade writes a
+    schema-v1 event log (``jsonl``), a span log
+    (``<name>.spans.jsonl``) and a Perfetto-loadable timeline
+    (``chrome_trace``) under ``out_dir``.  ``trace_sample`` is the
+    deterministic per-request span sampling rate (keyed on the request
+    run ordinal — no RNG, identical sampled sets in every engine);
+    ``slo_burn`` configures the burn-rate monitor.  Recording never
+    changes metrics — golden results are byte-identical at every
+    detail level.
     """
 
     detail: str = "decisions"
@@ -550,6 +593,8 @@ class ObservabilitySpec:
     jsonl: bool = True
     chrome_trace: bool = True
     window_s: float = 60.0
+    trace_sample: float = 0.01
+    slo_burn: SLOBurnSpec = dataclasses.field(default_factory=SLOBurnSpec)
 
     def __post_init__(self) -> None:
         # single source of truth for valid levels is the obs layer
@@ -568,6 +613,11 @@ class ObservabilitySpec:
         _require(
             self.window_s > 0,
             f"observability.window_s must be positive, got {self.window_s}",
+        )
+        _require(
+            0.0 <= self.trace_sample <= 1.0,
+            f"observability.trace_sample must be in [0, 1], "
+            f"got {self.trace_sample}",
         )
 
     def to_dict(self) -> Dict[str, Any]:

@@ -87,13 +87,14 @@ class _Rep:
     """Array-era replica record: plain slots, no FSM object, no probes."""
 
     __slots__ = ("inst", "slot", "rid", "dead", "rtt",
-                 "running", "queue", "qage", "qmin", "batch")
+                 "running", "queue", "qage", "qmin", "batch", "ord")
 
     def __init__(self, inst: Instance, slot: int,
                  rtt: List[float]) -> None:
         self.inst = inst
         self.slot = slot
         self.rid = inst.id
+        self.ord = -1                        # dense obs ordinal (spans)
         self.dead = False
         self.rtt = rtt                       # client-region code -> seconds
         self.running: List[Tuple[float, int]] = []   # (finish_s, req index)
@@ -143,7 +144,6 @@ class VectorizedServingEngine:
         # runtime and window sampler all emit into this one sink, so the
         # stream is byte-identical to the legacy simulator's
         self.obs = obs if obs is not None else ObsRecorder()
-        self._win = WindowSampler(self.obs)
         self.catalog = catalog or default_catalog()
         self.cfg = cfg
         self.itype = self.catalog.instance_type(itype)
@@ -172,6 +172,19 @@ class VectorizedServingEngine:
                 self.latency_model, self._token_knobs
             )
             if replica_model == "token" else None
+        )
+        # the SLO-burn monitor inside the sampler needs the token-mode
+        # latency targets, so construction waits for the knobs above
+        self._win = WindowSampler(
+            self.obs,
+            slo_ttft_s=(
+                self._token_knobs.slo_ttft_s
+                if self._token_cfg is not None else None
+            ),
+            slo_tpot_s=(
+                self._token_knobs.slo_tpot_s
+                if self._token_cfg is not None else None
+            ),
         )
         self._token_records: List[TokenRecord] = []
         self._busy: Set[int] = set()         # slots with live batch work
@@ -217,6 +230,10 @@ class VectorizedServingEngine:
         # ---- compile the request tape into arrays ---------------------
         reqs = sorted(requests, key=lambda r: r.arrival_s)
         self.requests = reqs
+        # request-span collector (None when off / unsampled).  The tape
+        # is the stable arrival-sort, so tape index == span ordinal and
+        # the hot loops test want_l[i] directly — no id lookup.
+        self._spans = self.obs.span_collector(reqs)
         n = len(reqs)
         self._n = n
         self._arr = np.fromiter(
@@ -311,8 +328,10 @@ class VectorizedServingEngine:
             for creg in self._client_regions
         ]
         rep = _Rep(inst, len(self._reps), rtt)
+        if self._spans is not None:
+            rep.ord = self.obs.replica_ordinal(inst.id)
         if self._token_cfg is not None:
-            rep.batch = ContinuousBatch(self._token_cfg)
+            rep.batch = ContinuousBatch(self._token_cfg, tap=self._spans)
         self._reps.append(rep)
         self._live.append(rep)
         self._by_id[inst.id] = rep
@@ -341,10 +360,15 @@ class VectorizedServingEngine:
             arr = self._arr_l
             pending = self._pending
             pmin = self._pmin
+            spans = self._spans
+            want = spans.want_l if spans is not None else None
+            t_kill = now if now is not None else 0.0
             for i in kr.keys:
                 pending.append(i)
                 if arr[i] < pmin:
                     pmin = arr[i]
+                if want is not None and want[i]:
+                    spans.preempt(i, t_kill)
             self._pmin = pmin
             self._n_retried += len(kr.keys)
             self._busy.discard(rep.slot)
@@ -358,14 +382,21 @@ class VectorizedServingEngine:
         arr = self._arr_l
         pending = self._pending
         pmin = self._pmin
+        spans = self._spans
+        want = spans.want_l if spans is not None else None
+        t_kill = now if now is not None else 0.0
         for _, i in rep.running:
             pending.append(i)
             if arr[i] < pmin:
                 pmin = arr[i]
+            if want is not None and want[i]:
+                spans.preempt(i, t_kill)
         for i in rep.queue:
             pending.append(i)
             if arr[i] < pmin:
                 pmin = arr[i]
+            if want is not None and want[i]:
+                spans.preempt(i, t_kill)
         self._pmin = pmin
         self._n_retried += len(rep.running) + len(rep.queue)
         self._qn -= len(rep.queue)
@@ -398,21 +429,24 @@ class VectorizedServingEngine:
         rcode = self._rcode_l
         arr = self._arr_l
         records = self._token_records
+        spans = self._spans
+        want = spans.want_l if spans is not None else None
         for s in outcome.drained:
             # finished decoding inside the grace window: completes at
             # the kill instant, first token (if any) already emitted
             i = s.key
             rtt = rep.rtt[rcode[i]]
             e2e = finish - arr[i] + rtt
-            if e2e > self.timeout_s:
+            outcome_ok = e2e <= self.timeout_s
+            first = (
+                s.first_s + cfg.overhead_s
+                if math.isfinite(s.first_s) else finish
+            )
+            if not outcome_ok:
                 self.failed += 1
             else:
                 self.latencies.append(e2e)
                 self.completed += 1
-                first = (
-                    s.first_s + cfg.overhead_s
-                    if math.isfinite(s.first_s) else finish
-                )
                 records.append(TokenRecord(
                     req_id=i,
                     arrival_s=arr[i],
@@ -421,6 +455,11 @@ class VectorizedServingEngine:
                     output_tokens=s.output_tokens,
                     rtt_s=rtt,
                 ))
+            if want is not None and want[i]:
+                spans.finish_token(
+                    i, first, finish, cfg.overhead_s,
+                    "ok" if outcome_ok else "timeout", e2e,
+                )
         by_rid = {r.rid: r for r in cands}
         for m in outcome.migrated:
             # the target batch has queued work now; make sure it steps
@@ -439,7 +478,7 @@ class VectorizedServingEngine:
         if rep is not None:
             self._kill(rep, now)
 
-    def _sync(self) -> None:
+    def _sync(self, now: Optional[float] = None) -> None:
         """Reconcile the replica set with the cluster's active instances.
 
         Instance state only changes at control ticks, so (unlike the legacy
@@ -453,7 +492,7 @@ class VectorizedServingEngine:
                 if inst.is_active():
                     self._new_rep(inst)
             elif not inst.is_active():
-                self._kill(rep)
+                self._kill(rep, now)
         if self._live_dirty:
             self._live = [r for r in self._live if not r.dead]
             self._live_dirty = False
@@ -488,7 +527,7 @@ class VectorizedServingEngine:
         return False
 
     def _tick(self, now: float, cluster: ClusterSimulator) -> None:
-        self._sync()
+        self._sync(now)
         dt = cluster.config.control_interval_s
         t = now
         end = now + dt
@@ -579,6 +618,8 @@ class VectorizedServingEngine:
         arr = self._arr_l
         timeout = self.timeout_s
         ready = self._ready_slots
+        spans = self._spans
+        want = spans.want_l if spans is not None else None
         if not ready:
             # nothing to route to; age out requests past their timeout
             if len(pending) >= _VEC_MIN:
@@ -589,6 +630,10 @@ class VectorizedServingEngine:
                 n_keep = int(keep.sum())
                 if n_keep != len(pending):
                     self.failed += len(pending) - n_keep
+                    if want is not None:
+                        for i in pa[~keep].tolist():
+                            if want[i]:
+                                spans.expire(i, t, arr[i])
                     pa = pa[keep]
                     self._pending = pa.tolist()
                     self._pmin = (
@@ -600,6 +645,8 @@ class VectorizedServingEngine:
                 for i in pending:
                     if t - arr[i] > timeout:
                         self.failed += 1
+                        if want is not None and want[i]:
+                            spans.expire(i, t, arr[i])
                     else:
                         kept.append(i)
                         if arr[i] < pmin:
@@ -626,6 +673,8 @@ class VectorizedServingEngine:
             for i in pending:
                 if check_to and t - arr[i] > timeout:
                     self.failed += 1
+                    if want is not None and want[i]:
+                        spans.expire(i, t, arr[i])
                     continue
                 j = cur % nready
                 s = ready[j]
@@ -634,12 +683,18 @@ class VectorizedServingEngine:
                 # bookkeeping decrements them, so keep the counts honest
                 loads[j] += 1
                 rep = reps[s]
+                if want is not None and want[i]:
+                    spans.dispatch(
+                        i, t, rep.ord, rep.rtt[rcode[i]], arr[i]
+                    )
                 run = rep.running
                 if not rep.queue and len(run) < conc and s not in due:
                     # immediate start == queue-then-start this sub-tick
                     finish = t + svc[i] * (1.0 + 0.15 * len(run))
                     run.append((finish, i))
                     heapq.heappush(heap, (finish, s))
+                    if want is not None and want[i]:
+                        spans.start(i, t)
                     continue
                 a = arr[i] - rep.rtt[rcode[i]]
                 rep.queue.append(i)
@@ -664,6 +719,8 @@ class VectorizedServingEngine:
             for i in pending:
                 if check_to and t - arr[i] > timeout:
                     self.failed += 1
+                    if want is not None and want[i]:
+                        spans.expire(i, t, arr[i])
                     continue
                 rc = rcode[i]
                 col = cols.get(rc)
@@ -680,12 +737,16 @@ class VectorizedServingEngine:
                         best, bl, br, bi = j, lj, col[j], ids[j]
                 loads[best] += 1
                 rep = ready_reps[best]
+                if want is not None and want[i]:
+                    spans.dispatch(i, t, rep.ord, col[best], arr[i])
                 run = rep.running
                 if not rep.queue and len(run) < conc \
                         and rep.slot not in due:
                     finish = t + svc[i] * (1.0 + 0.15 * len(run))
                     run.append((finish, i))
                     heapq.heappush(heap, (finish, rep.slot))
+                    if want is not None and want[i]:
+                        spans.start(i, t)
                     continue
                 a = arr[i] - rep.rtt[rc]
                 rep.queue.append(i)
@@ -714,6 +775,8 @@ class VectorizedServingEngine:
         reps = self._reps
         loads = self._loads
         pos = self._pos
+        spans = self._spans
+        want = spans.want_l if spans is not None else None
         for s in slots:
             rep = reps[s]
             run = rep.running
@@ -724,11 +787,16 @@ class VectorizedServingEngine:
                 for f, i in run:
                     if f <= t:
                         e2e = (f - arr[i]) + rep.rtt[rcode[i]]
-                        if e2e > timeout:
+                        ok = e2e <= timeout
+                        if not ok:
                             self.failed += 1
                         else:
                             self.latencies.append(e2e)
                             self.completed += 1
+                        if want is not None and want[i]:
+                            spans.finish(
+                                i, f, "ok" if ok else "timeout", e2e
+                            )
                         n_done += 1
                     else:
                         still.append((f, i))
@@ -746,6 +814,10 @@ class VectorizedServingEngine:
                 while k < nq and t - ages[k] > timeout:
                     k += 1
                 if k:
+                    if want is not None:
+                        for i in q[:k]:
+                            if want[i]:
+                                spans.expire(i, t, arr[i])
                     del q[:k]
                     del ages[:k]
                     self.failed += k
@@ -760,6 +832,8 @@ class VectorizedServingEngine:
                         for i, a in zip(q, ages):
                             if t - a > timeout:
                                 n_exp += 1
+                                if want is not None and want[i]:
+                                    spans.expire(i, t, arr[i])
                             else:
                                 kept.append(i)
                                 kept_a.append(a)
@@ -782,6 +856,8 @@ class VectorizedServingEngine:
                     finish = t + svc[i] * (1.0 + 0.15 * len(run))
                     run.append((finish, i))
                     heapq.heappush(heap, (finish, s))
+                    if want is not None and want[i]:
+                        spans.start(i, t)
                 del q[:j]
                 del rep.qage[:j]
                 self._qn -= j
@@ -826,6 +902,8 @@ class VectorizedServingEngine:
         arr = self._arr_l
         timeout = self.timeout_s
         ready = self._ready_slots
+        spans = self._spans
+        want = spans.want_l if spans is not None else None
         if not ready:
             # nothing to route to; age out requests past their timeout
             kept: List[int] = []
@@ -833,6 +911,8 @@ class VectorizedServingEngine:
             for i in pending:
                 if t - arr[i] > timeout:
                     self.failed += 1
+                    if want is not None and want[i]:
+                        spans.expire(i, t, arr[i])
                 else:
                     kept.append(i)
                     if arr[i] < pmin:
@@ -853,16 +933,31 @@ class VectorizedServingEngine:
             for i in pending:
                 if check_to and t - arr[i] > timeout:
                     self.failed += 1
+                    if want is not None and want[i]:
+                        spans.expire(i, t, arr[i])
                     continue
                 j = cur % nready
                 s = ready[j]
                 cur += 1
-                if reps[s].batch.enqueue(i, ptok[i], otok[i], arr[i], t,
-                                         rtt_s=reps[s].rtt[rcode[i]]):
+                rep = reps[s]
+                ok = rep.batch.enqueue(i, ptok[i], otok[i], arr[i], t,
+                                       rtt_s=rep.rtt[rcode[i]])
+                if ok:
                     loads[j] += 1
                     busy.add(s)
                 else:
                     self.failed += 1     # can never fit the KV budget
+                if want is not None and want[i]:
+                    # same tap order as TokenReplica.submit: dispatch,
+                    # then track (admitted) or reject (unservable)
+                    spans.dispatch(
+                        i, t, rep.ord, rep.rtt[rcode[i]], arr[i],
+                        token=True,
+                    )
+                    if ok:
+                        rep.batch.track(i, i)
+                    else:
+                        spans.reject(i, t)
             self._rr_cursor = cur
         else:
             # least-loaded waterfill over (load, rtt, id), load = batch
@@ -877,6 +972,8 @@ class VectorizedServingEngine:
             for i in pending:
                 if check_to and t - arr[i] > timeout:
                     self.failed += 1
+                    if want is not None and want[i]:
+                        spans.expire(i, t, arr[i])
                     continue
                 rc = rcode[i]
                 col = cols.get(rc)
@@ -892,12 +989,21 @@ class VectorizedServingEngine:
                     ):
                         best, bl, br, bi = j, lj, col[j], ids[j]
                 rep = ready_reps[best]
-                if rep.batch.enqueue(i, ptok[i], otok[i], arr[i], t,
-                                     rtt_s=rep.rtt[rc]):
+                ok = rep.batch.enqueue(i, ptok[i], otok[i], arr[i], t,
+                                       rtt_s=rep.rtt[rc])
+                if ok:
                     loads[best] += 1
                     busy.add(rep.slot)
                 else:
                     self.failed += 1
+                if want is not None and want[i]:
+                    spans.dispatch(
+                        i, t, rep.ord, rep.rtt[rc], arr[i], token=True
+                    )
+                    if ok:
+                        rep.batch.track(i, i)
+                    else:
+                        spans.reject(i, t)
         self._pending = []
         self._pmin = _INF
 
@@ -907,6 +1013,9 @@ class VectorizedServingEngine:
         pos = self._pos
         rcode = self._rcode_l
         records = self._token_records
+        spans = self._spans
+        want = spans.want_l if spans is not None else None
+        overhead = self._token_cfg.overhead_s
         idle: List[int] = []
         for s in sorted(self._busy):
             rep = self._reps[s]
@@ -916,7 +1025,8 @@ class VectorizedServingEngine:
                 i = c.key
                 rtt = rep.rtt[rcode[i]]
                 e2e = c.finish_s - c.arrival_s + rtt
-                if e2e > timeout:
+                ok = e2e <= timeout
+                if not ok:
                     self.failed += 1
                 else:
                     self.latencies.append(e2e)
@@ -929,10 +1039,20 @@ class VectorizedServingEngine:
                         output_tokens=c.output_tokens,
                         rtt_s=rtt,
                     ))
+                if want is not None and want[i]:
+                    spans.finish_token(
+                        i, c.first_token_s, c.finish_s, overhead,
+                        "ok" if ok else "timeout", e2e,
+                    )
                 n_removed += 1
             if timeout > 0 and batch.n_queued:
                 expired = batch.expire_queue(t, timeout)
                 self.failed += len(expired)
+                if want is not None:
+                    arr = self._arr_l
+                    for i in expired:
+                        if want[i]:
+                            spans.expire(i, t, arr[i])
                 n_removed += len(expired)
             if n_removed:
                 loads[pos[s]] -= n_removed
@@ -951,6 +1071,8 @@ class VectorizedServingEngine:
         self.failed += len(self._pending)
         for rep in self._reps:
             self.failed += rep.load
+        if self._spans is not None:
+            self._spans.finalize(base.duration_s)
         token_stats = None
         if self._token_cfg is not None:
             knobs = self._token_knobs

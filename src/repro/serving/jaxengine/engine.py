@@ -80,7 +80,7 @@ class JaxServingEngine(VectorizedServingEngine):
         if rec is None:
             super()._tick(now, cluster)
             return
-        self._sync()
+        self._sync(now)
         k = rec.record_tick(self._ready_slots)
         obs = rec.obs_for(k)
         if obs:
@@ -144,6 +144,7 @@ class JaxServingEngine(VectorizedServingEngine):
             post_slots=post,
             base=base,
             n_slots=len(self._reps),
+            trace_on=self._spans is not None,
         )
         self.schedule = sched
         return sched
@@ -252,16 +253,23 @@ def run_schedules(
     scheds: Sequence[CellSchedule],
     *,
     queue_capacity: int = DEFAULT_QUEUE_CAPACITY,
+    outputs: Optional[List[Optional[dict]]] = None,
 ) -> List[Optional[ServingResult]]:
     """Phase B over many cells: group by static shape signature, pad
     each group to a common shape, and run one vmapped program per group.
 
     Returns results aligned with ``scheds``; ``None`` marks a lane whose
     queue pool overflowed (caller must rerun that cell on the oracle).
+    Pass a list as ``outputs`` to also receive each lane's raw kernel
+    outputs (aligned with ``scheds``; ``None`` for overflow/empty lanes)
+    — the span-reconstruction path in :func:`run_cells` consumes these.
     """
     from repro.serving.jaxengine import kernel as K
 
     results: List[Optional[ServingResult]] = [None] * len(scheds)
+    if outputs is not None:
+        del outputs[:]
+        outputs.extend([None] * len(scheds))
     groups: dict = {}
     for idx, sc in enumerate(scheds):
         if sc.grid.n_points == 0 or sc.n == 0 or sc.n_slots == 0:
@@ -276,10 +284,11 @@ def run_schedules(
             sc.concurrency,
             sc.lb_kind,
             sc.timeout_s > 0,
+            sc.trace_on,
         )
         groups.setdefault(key, []).append(idx)
 
-    for (gsig, C, lb_kind, expire_on), idxs in groups.items():
+    for (gsig, C, lb_kind, expire_on, trace_on), idxs in groups.items():
         cells = [scheds[i] for i in idxs]
         g = cells[0].grid
         N = max(c.n for c in cells)
@@ -331,6 +340,7 @@ def run_schedules(
             ATYP=atyp,
             lb_rr=(lb_kind == "rr"),
             expire_on=expire_on,
+            trace_on=trace_on,
         )
         out = K.run_group(
             key,
@@ -344,7 +354,50 @@ def run_schedules(
                 continue     # caller falls back to the oracle
             lane_out = {k2: v[li] for k2, v in out.items()}
             results[i] = assemble_result(cells[li], lane_out)
+            if outputs is not None:
+                outputs[i] = lane_out
     return results
+
+
+def _reconstruct_spans(
+    eng: JaxServingEngine, sched: CellSchedule, out: dict
+) -> None:
+    """Rebuild sampled request spans from the kernel's span timelines.
+
+    The kernel resolves one (dispatch, start, finish, slot) quadruple per
+    completion-scattered request — a killed-and-retried request records
+    its final, completing attempt (``attempts`` stays 1; no preempt
+    cuts), and drain-failed or queue-expired requests get no jax spans.
+    For never-preempted requests the replayed taps are bit-identical to
+    the oracle's (x64 kernel, same grid), so the span parity test can
+    compare records byte-for-byte after filtering.
+    """
+    spans = eng._spans
+    if spans is None or "disp_t" not in out:
+        return
+    n = sched.n
+    status = np.asarray(out["status"][:n])
+    e2e = np.asarray(out["e2e"][:n])
+    disp = np.asarray(out["disp_t"][:n])
+    start = np.asarray(out["start_t"][:n])
+    rep_slot = np.asarray(out["rep"][:n])
+    fin = np.asarray(out["fin_t"][:n])
+    rtt, rcode, arr = sched.rtt, sched.rcode, sched.arr
+    ords = [r.ord for r in eng._reps]
+    want = spans.want_l
+    for o in range(n):
+        if not want[o] or status[o] == 0:
+            continue
+        slot = int(rep_slot[o])
+        spans.dispatch(
+            o, float(disp[o]), ords[slot],
+            float(rtt[slot, rcode[o]]), float(arr[o]),
+        )
+        spans.start(o, float(start[o]))
+        spans.finish(
+            o, float(fin[o]),
+            "ok" if status[o] == 1 else "timeout", float(e2e[o]),
+        )
 
 
 def run_cells(
@@ -370,13 +423,16 @@ def run_cells(
             getattr(e, "queue_capacity", DEFAULT_QUEUE_CAPACITY)
             for e in engines
         )
-        for i, res in zip(jax_idx, run_schedules(scheds,
-                                                 queue_capacity=cap)):
+        outs: List[Optional[dict]] = []
+        group = run_schedules(scheds, queue_capacity=cap, outputs=outs)
+        for k, (i, res) in enumerate(zip(jax_idx, group)):
             if res is None:     # queue pool overflow → oracle rerun
                 # the rerun's own recorder rides on its result
                 res = engines[i]._fallback_run(durations[i])
             else:
                 obs = engines[i].obs
+                if outs[k] is not None:
+                    _reconstruct_spans(engines[i], scheds[k], outs[k])
                 res = dataclasses.replace(
                     res,
                     metrics=obs.registry.snapshot() or None,

@@ -93,6 +93,7 @@ class KernelKey:
     ATYP: int       # p99 arrivals per sub-step: sizes the masked scans
     lb_rr: bool     # round-robin (else least-loaded)
     expire_on: bool  # timeout_s > 0: run the queue-expiry sweep
+    trace_on: bool = False  # carry span timelines (dispatch/start/finish)
 
 
 _KERNELS: Dict[KernelKey, object] = {}
@@ -111,6 +112,11 @@ _SMALL = (
 def _build_kernel(key: KernelKey):
     G, N, R, Q, C = key.G, key.N, key.R, key.Q, key.C
     lb_rr, expire_on, E = key.lb_rr, key.expire_on, key.E
+    trace_on = key.trace_on
+    # span timelines ride the running/queue pools (same shapes, same
+    # scatter indices), so tracing adds writes but no new loop structure
+    small = _SMALL + (("run_disp", "run_start", "q_disp")
+                      if trace_on else ())
     AMAX = max(key.AMAX, 1)
     # scans cover the typical step; the chunked remainder loops absorb
     # the Poisson tail (≤1 % of steps), so executed pop-bodies per step
@@ -160,10 +166,23 @@ def _build_kernel(key: KernelKey):
             "status": jnp.zeros(N + 1, dtype=jnp.int8),
             "e2e": jnp.zeros(N + 1),
         }
+        if trace_on:
+            st0.update({
+                # pool-shaped timelines carried by the loops ...
+                "run_disp": jnp.zeros((R, C)),
+                "run_start": jnp.zeros((R, C)),
+                "q_disp": jnp.zeros((R, Q)),
+                # ... and O(N) per-request outputs written only by the
+                # completion stage (like status/e2e, never loop-carried)
+                "disp_t": jnp.full(N + 1, -jnp.inf),
+                "start_t": jnp.full(N + 1, -jnp.inf),
+                "rep": jnp.full(N + 1, -1, dtype=jnp.int64),
+                "fin_t": jnp.full(N + 1, -jnp.inf),
+            })
 
         def step(st, xs):
             t, g, win = xs
-            s = {k: st[k] for k in _SMALL}
+            s = {k: st[k] for k in small}
 
             # -- 1) kill events due before this sub-step ----------------
             if E > 0:
@@ -268,6 +287,13 @@ def _build_kernel(key: KernelKey):
                     jnp.where(do_start, i, s["run_idx"][slot, rn_c])
                 )
                 s["run_n"] = s["run_n"].at[slot].add(do_start)
+                if trace_on:
+                    s["run_disp"] = s["run_disp"].at[slot, rn_c].set(
+                        jnp.where(do_start, t, s["run_disp"][slot, rn_c])
+                    )
+                    s["run_start"] = s["run_start"].at[slot, rn_c].set(
+                        jnp.where(do_start, t, s["run_start"][slot, rn_c])
+                    )
                 # queue append with effective age (arrival − rtt): the
                 # shared `t - age > timeout` sweep is then RTT-inclusive
                 age = arr[i] - rtt[slot, rc]
@@ -281,6 +307,10 @@ def _build_kernel(key: KernelKey):
                 s["q_age"] = s["q_age"].at[slot, free].set(
                     jnp.where(do_queue, age, s["q_age"][slot, free])
                 )
+                if trace_on:
+                    s["q_disp"] = s["q_disp"].at[slot, free].set(
+                        jnp.where(do_queue, t, s["q_disp"][slot, free])
+                    )
                 s["q_seq"] = s["q_seq"].at[slot, free].set(
                     jnp.where(do_queue, s["seq_ctr"],
                               s["q_seq"][slot, free])
@@ -329,6 +359,23 @@ def _build_kernel(key: KernelKey):
             verdict = jnp.where(e2e_v > timeout, 2, 1).astype(jnp.int8)
             status = st["status"].at[scat].set(verdict.ravel())
             e2e = st["e2e"].at[scat].set(e2e_v.ravel())
+            if trace_on:
+                # resolve the span timeline at the same scatter (a killed
+                # request overwrites on its retry, so these record the
+                # final — completing — attempt)
+                slot_ids = jnp.broadcast_to(
+                    jnp.arange(R, dtype=jnp.int64)[:, None], (R, C)
+                )
+                trace_out = {
+                    "disp_t": st["disp_t"].at[scat].set(
+                        s["run_disp"].ravel()
+                    ),
+                    "start_t": st["start_t"].at[scat].set(
+                        s["run_start"].ravel()
+                    ),
+                    "rep": st["rep"].at[scat].set(slot_ids.ravel()),
+                    "fin_t": st["fin_t"].at[scat].set(fin.ravel()),
+                }
             order = jnp.argsort(done.astype(jnp.int8), axis=1,
                                 stable=True)         # keep start order
             s["run_fin"] = jnp.take_along_axis(
@@ -336,6 +383,14 @@ def _build_kernel(key: KernelKey):
             )
             s["run_idx"] = jnp.take_along_axis(idxs, order, axis=1)
             s["run_n"] = s["run_n"] - done.sum(axis=1)
+            if trace_on:
+                # compact the timelines in lockstep with run_fin/run_idx
+                s["run_disp"] = jnp.take_along_axis(
+                    s["run_disp"], order, axis=1
+                )
+                s["run_start"] = jnp.take_along_axis(
+                    s["run_start"], order, axis=1
+                )
 
             # -- 5) queue expiry (RTT-inclusive; O(R) guard per step,
             #       one whole slot cleared per iteration) ---------------
@@ -383,6 +438,14 @@ def _build_kernel(key: KernelKey):
                     jnp.where(act, i, s["run_idx"][slot, rn_c])
                 )
                 s["run_n"] = s["run_n"].at[slot].add(act)
+                if trace_on:
+                    s["run_disp"] = s["run_disp"].at[slot, rn_c].set(
+                        jnp.where(act, s["q_disp"][slot, j],
+                                  s["run_disp"][slot, rn_c])
+                    )
+                    s["run_start"] = s["run_start"].at[slot, rn_c].set(
+                        jnp.where(act, t, s["run_start"][slot, rn_c])
+                    )
                 s["q_valid"] = s["q_valid"].at[slot, j].set(
                     s["q_valid"][slot, j] & (~act)
                 )
@@ -414,10 +477,12 @@ def _build_kernel(key: KernelKey):
             st.update(s)
             st["status"] = status
             st["e2e"] = e2e
+            if trace_on:
+                st.update(trace_out)
             return st, None
 
         st, _ = lax.scan(step, st0, (ts, gs, wins))
-        return {
+        out = {
             "status": st["status"][:N],
             "e2e": st["e2e"][:N],
             "a_ptr": st["a_ptr"],
@@ -426,6 +491,14 @@ def _build_kernel(key: KernelKey):
             "n_retried": st["n_retried"],
             "overflow": st["overflow"],
         }
+        if trace_on:
+            out.update({
+                "disp_t": st["disp_t"][:N],
+                "start_t": st["start_t"][:N],
+                "rep": st["rep"][:N],
+                "fin_t": st["fin_t"][:N],
+            })
+        return out
 
     return jax.jit(
         jax.vmap(

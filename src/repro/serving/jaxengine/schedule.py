@@ -118,6 +118,7 @@ class CellSchedule:
     post_slots: np.ndarray       # slots of post-horizon kill events
     base: SimResult              # control-plane result (costs, churn, ...)
     n_slots: int
+    trace_on: bool = False       # carry span timelines through the kernel
 
     @property
     def n(self) -> int:

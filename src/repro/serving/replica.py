@@ -49,6 +49,8 @@ class Replica:
         concurrency: Optional[int] = None,
         concurrency_cap: int = 16,   # cap on the model-derived default
         timeout_s: float = 0.0,      # 0: requests never expire in queue
+        span_tap=None,               # repro.obs.spans.SpanCollector
+        span_ord: int = -1,          # this replica's dense run ordinal
     ) -> None:
         self.instance = instance
         self.latency = latency
@@ -56,6 +58,8 @@ class Replica:
             latency.max_concurrency(), concurrency_cap
         )
         self.timeout_s = timeout_s
+        self.span_tap = span_tap
+        self.span_ord = span_ord
         self.state = ReplicaState.PROVISIONING
         self.queue: List[Request] = []
         self.running: List[InFlight] = []
@@ -126,6 +130,7 @@ class Replica:
                 else:
                     fresh.append(q)
             self.queue = fresh
+        tap = self.span_tap
         while self.queue and len(self.running) < self.concurrency:
             req = self.queue.pop(0)
             svc = self.latency.service_s(req.prompt_tokens,
@@ -135,6 +140,10 @@ class Replica:
             self.running.append(
                 InFlight(req, now, now + svc * factor)
             )
+            if tap is not None:
+                o = tap.want_ids.get(req.id)
+                if o is not None:
+                    tap.start(o, now)
         return done, expired
 
     def eta_if_submitted(self, req: Request, now: float) -> float:

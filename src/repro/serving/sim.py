@@ -41,6 +41,7 @@ from repro.models.config import ModelConfig
 from repro.obs.events import WindowSampleEvent
 from repro.obs.recorder import ObsRecorder
 from repro.obs.registry import use_registry
+from repro.obs.slo import SLOBurnMonitor
 from repro.serving.latency import LatencyModel
 from repro.serving.load_balancer import LeastLoadedBalancer, LoadBalancer
 from repro.serving.replica import Replica, ReplicaState
@@ -61,15 +62,27 @@ class WindowSampler:
     Both serving engines drive this one code path with order-independent
     inputs (cumulative counters + instantaneous cluster state at the
     control-tick boundary), which is what makes their window samples —
-    and therefore their whole event JSONL — byte-identical.
+    and therefore their whole event JSONL — byte-identical.  The SLO
+    burn-rate monitor hangs off the same choke point: every sample
+    window also folds its error counts into the trailing fast/slow burn
+    windows and emits one :class:`~repro.obs.events.SLOBurnEvent`.
     """
 
-    def __init__(self, obs: ObsRecorder) -> None:
+    def __init__(
+        self,
+        obs: ObsRecorder,
+        slo_ttft_s: Optional[float] = None,
+        slo_tpot_s: Optional[float] = None,
+    ) -> None:
         self.obs = obs
         self._next_t = 0.0
         self._last_t = 0.0
         self._last_completed = 0
+        self._last_failed = 0
         self._records_seen = 0
+        self._burn = SLOBurnMonitor(
+            obs.slo_burn, slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s
+        )
 
     def maybe_emit(
         self,
@@ -97,6 +110,7 @@ class WindowSampler:
         delta = completed - self._last_completed
         goodput = delta / elapsed if elapsed > 0 else 0.0
         ttft_p50: Optional[float] = None
+        new: Optional[Sequence[TokenRecord]] = None
         if token_records is not None:
             new = token_records[self._records_seen:]
             self._records_seen = len(token_records)
@@ -119,8 +133,16 @@ class WindowSampler:
             goodput_rps=goodput,
             ttft_p50_s=ttft_p50,
         ))
+        # burn rates from the same order-independent window deltas
+        self.obs.emit_window(self._burn.observe(
+            now,
+            d_completed=delta,
+            d_failed=failed - self._last_failed,
+            new_records=new,
+        ))
         self._last_t = now
         self._last_completed = completed
+        self._last_failed = failed
         self._next_t = now + self.obs.window_s
 
 
@@ -203,7 +225,6 @@ class ServingSimulator:
     ) -> None:
         self.catalog = catalog or default_catalog()
         self.obs = obs if obs is not None else ObsRecorder()
-        self._win = WindowSampler(self.obs)
         self.cfg = cfg
         self.itype = self.catalog.instance_type(itype)
         # an injected model (e.g. ProfiledLatencyModel from the spec's
@@ -232,6 +253,19 @@ class ServingSimulator:
             )
             if replica_model == "token" else None
         )
+        # the sampler needs the token SLO targets for burn rates, so it
+        # is built after the token knobs are resolved
+        self._win = WindowSampler(
+            self.obs,
+            slo_ttft_s=(
+                self._token_knobs.slo_ttft_s
+                if self._token_cfg is not None else None
+            ),
+            slo_tpot_s=(
+                self._token_knobs.slo_tpot_s
+                if self._token_cfg is not None else None
+            ),
+        )
         self._token_records: List[TokenRecord] = []
         self._n_kv_preempted = 0
         self._n_killed_queued = 0
@@ -257,6 +291,9 @@ class ServingSimulator:
         self._recompute_saved_s = 0.0
 
         self.requests = sorted(requests, key=lambda r: r.arrival_s)
+        # request-span collector (None when off / unsampled): taps below
+        # fire only for sampled ordinals, keyed via want_ids[req.id]
+        self._spans = self.obs.span_collector(self.requests)
         self._next_arrival = 0
         self.pending: List[Request] = []       # waiting for a replica
         self._deadline: Dict[int, float] = {}  # req id -> timeout time
@@ -288,16 +325,22 @@ class ServingSimulator:
 
     # ------------------------------------------------------------------
     def _new_replica(self, inst: Instance) -> Replica:
+        tap = self._spans
+        ord_ = (
+            self.obs.replica_ordinal(inst.id) if tap is not None else -1
+        )
         if self._token_cfg is not None:
             return TokenReplica(
                 inst, self.latency_model, self._token_cfg,
                 timeout_s=self.timeout_s,
+                span_tap=tap, span_ord=ord_,
             )
         return Replica(
             inst, self.latency_model,
             concurrency=self.concurrency,
             concurrency_cap=self.concurrency_cap,
             timeout_s=self.timeout_s,
+            span_tap=tap, span_ord=ord_,
         )
 
     def _sync_replicas(self, now: float) -> None:
@@ -323,9 +366,14 @@ class ServingSimulator:
             return
         killed = rep.kill()
         self._n_retried += len(killed)
+        tap = self._spans
         for req in killed:
             # client retry: back into the pending pool
             self.pending.append(req)
+            if tap is not None:
+                o = tap.want_ids.get(req.id)
+                if o is not None:
+                    tap.preempt(o, now)
         if isinstance(rep, TokenReplica) and rep.kill_report is not None:
             kr = rep.kill_report
             self._n_kv_preempted += kr.n_batch
@@ -353,20 +401,23 @@ class ServingSimulator:
         )
         cfg = self._token_cfg
         finish = now + cfg.overhead_s
+        tap = self._spans
         for req, s in drained:
             # finished decoding inside the grace window: completes at
             # the kill instant, first token (if any) already emitted
             rtt = LoadBalancer.rtt_s(req, rep)
             e2e = finish - self._arrival[req.id] + rtt
-            if e2e > self.timeout_s:
+            outcome_ok = e2e <= self.timeout_s
+            if not outcome_ok:
                 self.failed += 1
             else:
                 self.latencies.append(e2e)
                 self.completed += 1
-                first = (
-                    s.first_s + cfg.overhead_s
-                    if math.isfinite(s.first_s) else finish
-                )
+            first = (
+                s.first_s + cfg.overhead_s
+                if math.isfinite(s.first_s) else finish
+            )
+            if outcome_ok:
                 self._token_records.append(TokenRecord(
                     req_id=req.id,
                     arrival_s=self._arrival[req.id],
@@ -375,9 +426,20 @@ class ServingSimulator:
                     output_tokens=s.output_tokens,
                     rtt_s=rtt,
                 ))
+            if tap is not None:
+                o = tap.want_ids.get(req.id)
+                if o is not None:
+                    tap.finish_token(
+                        o, first, finish, cfg.overhead_s,
+                        "ok" if outcome_ok else "timeout", e2e,
+                    )
         self._n_retried += len(failed)
         for req in failed:
             self.pending.append(req)
+            if tap is not None:
+                o = tap.want_ids.get(req.id)
+                if o is not None:
+                    tap.preempt(o, now)
         kr = outcome.kill_report
         self._n_kv_preempted += kr.n_batch
         self._n_killed_queued += kr.n_queued
@@ -401,27 +463,52 @@ class ServingSimulator:
             if r.state is ReplicaState.READY
         ]
         self.lb.update_ready(ready)
+        tap = self._spans
+        token = self._token_cfg is not None
         still: List[Request] = []
         for req in self.pending:
             if now - self._arrival[req.id] > self.timeout_s:
                 self.failed += 1
+                if tap is not None:
+                    o = tap.want_ids.get(req.id)
+                    if o is not None:
+                        tap.expire(o, now, req.arrival_s)
                 continue
-            if self.lb.route(req, now) is None:
+            rep = self.lb.route(req, now)
+            if rep is None:
                 still.append(req)
+            elif tap is not None and not token:
+                # token mode taps inside TokenReplica.submit (it knows
+                # the admission outcome); request mode taps here
+                o = tap.want_ids.get(req.id)
+                if o is not None:
+                    tap.dispatch(
+                        o, now, rep.span_ord,
+                        LoadBalancer.rtt_s(req, rep), req.arrival_s,
+                    )
         self.pending = still
 
     def _step_replicas(self, now: float) -> None:
         token = self._token_cfg is not None
+        tap = self._spans
         for rep in self.replicas.values():
             if rep.state is not ReplicaState.READY:
                 continue
             done, expired = rep.step(now)
             self.failed += len(expired)
+            if tap is not None:
+                for req in expired:
+                    o = tap.want_ids.get(req.id)
+                    if o is not None:
+                        # rejected admissions in `expired` already carry
+                        # their outcome; expire() is a no-op for them
+                        tap.expire(o, now, req.arrival_s)
             comps = rep.take_completions() if token else None
             for k, (req, finish) in enumerate(done):
                 rtt = LoadBalancer.rtt_s(req, rep)
                 e2e = finish - self._arrival[req.id] + rtt
-                if e2e > self.timeout_s:
+                ok = e2e <= self.timeout_s
+                if not ok:
                     self.failed += 1
                 else:
                     self.latencies.append(e2e)
@@ -436,6 +523,19 @@ class ServingSimulator:
                             output_tokens=c.output_tokens,
                             rtt_s=rtt,
                         ))
+                if tap is not None:
+                    o = tap.want_ids.get(req.id)
+                    if o is not None:
+                        outcome = "ok" if ok else "timeout"
+                        if comps is not None:
+                            c = comps[k]
+                            tap.finish_token(
+                                o, c.first_token_s, c.finish_s,
+                                self._token_cfg.overhead_s,
+                                outcome, e2e,
+                            )
+                        else:
+                            tap.finish(o, finish, outcome, e2e)
 
     def _tick(self, now: float, cluster: ClusterSimulator) -> None:
         dt = cluster.config.control_interval_s
@@ -481,6 +581,8 @@ class ServingSimulator:
         self.failed += len(self.pending)
         for rep in self.replicas.values():
             self.failed += rep.load
+        if self._spans is not None:
+            self._spans.finalize(base.duration_s)
         n_total = self._next_arrival
         token_stats = None
         if self._token_cfg is not None:

@@ -118,12 +118,18 @@ class TokenStats:
         windows: List[Dict[str, float]] = []
         n_windows = int(np.ceil(horizon / window_s)) if n else 0
         if n_windows:
-            bins = np.clip(
-                (finish // window_s).astype(np.int64), 0, n_windows - 1
+            # post-horizon finishes (the end-of-run drain) land in their
+            # own flagged bucket — clipping them into the last real
+            # window would inflate its goodput with work the horizon
+            # never saw
+            bins = np.minimum(
+                np.maximum((finish // window_s).astype(np.int64), 0),
+                n_windows,
             )
-            total = np.bincount(bins, minlength=n_windows)
+            total = np.bincount(bins, minlength=n_windows + 1)
             good = np.bincount(
-                bins, weights=ok.astype(np.float64), minlength=n_windows
+                bins, weights=ok.astype(np.float64),
+                minlength=n_windows + 1,
             )
             for k in range(n_windows):
                 windows.append({
@@ -131,6 +137,15 @@ class TokenStats:
                     "n_completed": int(total[k]),
                     "n_slo_ok": int(good[k]),
                     "goodput_rps": round(float(good[k]) / window_s, 6),
+                })
+            if total[n_windows]:
+                # drain bucket: no defined duration, so no rate
+                windows.append({
+                    "t0_s": round(n_windows * window_s, 6),
+                    "n_completed": int(total[n_windows]),
+                    "n_slo_ok": int(good[n_windows]),
+                    "goodput_rps": 0.0,
+                    "post_horizon": True,
                 })
         return cls(
             slo_ttft_s=slo_ttft_s,

@@ -43,13 +43,16 @@ class TokenReplica(Replica):
         engine_cfg: TokenEngineConfig,
         *,
         timeout_s: float = 0.0,
+        span_tap=None,
+        span_ord: int = -1,
     ) -> None:
         # concurrency slots are meaningless here (the batch admits by KV
         # budget and max_batch); pass 1 to skip the M/G/c derivation
         super().__init__(
-            instance, latency, concurrency=1, timeout_s=timeout_s
+            instance, latency, concurrency=1, timeout_s=timeout_s,
+            span_tap=span_tap, span_ord=span_ord,
         )
-        self.batch = ContinuousBatch(engine_cfg)
+        self.batch = ContinuousBatch(engine_cfg, tap=span_tap)
         self.kill_report: Optional[KillReport] = None
         self._by_key: Dict[int, Request] = {}
         self._rejected: List[Request] = []
@@ -61,16 +64,27 @@ class TokenReplica(Replica):
         return self.batch.load
 
     def submit(self, req: Request, now: float) -> None:
+        rtt = region_rtt_ms(req.client_region, self.region) / 1e3
         ok = self.batch.enqueue(
             req.id, req.prompt_tokens, req.output_tokens,
-            req.arrival_s, now,
-            rtt_s=region_rtt_ms(req.client_region, self.region) / 1e3,
+            req.arrival_s, now, rtt_s=rtt,
         )
         if ok:
             self._by_key[req.id] = req
         else:
             # prompt+output exceed the whole KV budget: unservable here
             self._rejected.append(req)
+        tap = self.span_tap
+        if tap is not None:
+            o = tap.want_ids.get(req.id)
+            if o is not None:
+                tap.dispatch(
+                    o, now, self.span_ord, rtt, req.arrival_s, token=True
+                )
+                if ok:
+                    self.batch.track(req.id, o)
+                else:
+                    tap.reject(o, now)
 
     def step(self, now: float) -> Tuple[
         List[Tuple[Request, float]], List[Request]

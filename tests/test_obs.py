@@ -64,6 +64,7 @@ GOLDEN_COUNTS = {
     "decision": 498,
     "launch_failure": 478,
     "lifecycle": 40,
+    "slo_burn": 130,
     "warning": 14,
     "window": 130,
 }
@@ -223,9 +224,11 @@ def test_golden_event_counts(three_runs):
     legacy, vector, jx = three_runs
     assert legacy.obs.event_counts() == GOLDEN_COUNTS
     assert vector.obs.event_counts() == GOLDEN_COUNTS
-    # jax phase-A replays the control plane; no data-plane windows
+    # jax phase-A replays the control plane; no data-plane windows and
+    # hence no per-window burn-rate events either
     assert jx.obs.event_counts() == {
-        k: v for k, v in GOLDEN_COUNTS.items() if k != "window"
+        k: v for k, v in GOLDEN_COUNTS.items()
+        if k not in ("window", "slo_burn")
     }
 
 
@@ -393,9 +396,11 @@ def test_service_exports_artifacts_at_full_detail(tmp_path):
     svc = Service(_spec_dict(detail="full", out_dir=str(tmp_path)))
     res = svc.run()
     assert res.obs is not None
-    assert set(svc.artifacts) == {"events", "trace"}
+    assert set(svc.artifacts) == {"events", "spans", "trace"}
     assert dumps_jsonl(read_jsonl(svc.artifacts["events"])) \
         == dumps_jsonl(res.obs.records())
+    assert dumps_jsonl(read_jsonl(svc.artifacts["spans"])) \
+        == dumps_jsonl(res.obs.span_records())
     with open(svc.artifacts["trace"]) as f:
         assert json.load(f)["traceEvents"]
     status = svc.status()

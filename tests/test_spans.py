@@ -1,0 +1,285 @@
+"""Request-span lockdown: tiling invariant, engine byte-identity,
+JAX reconstruction parity, and the SLO burn-rate alert.
+
+``check_span_tiling`` is the core invariant — every sampled request's
+segments tile the interval from arrival to last close contiguously
+(every close *is* the next open) regardless of which taps fired in
+which order.  It is checked on fixed seeded engine runs (request mode
+and token+migration mode), on a seeded random tap driver, and driven
+by hypothesis search where the ``property`` extra is installed (CI),
+mirroring the repo's other property suites.
+
+The byte-identity and parity tests pin the PR's tracing contract:
+
+* legacy ``ServingSimulator`` and ``VectorizedServingEngine`` produce
+  byte-identical span JSONL on the fixed token+migration scenario;
+* ``JaxServingEngine``'s host-side reconstruction matches the vector
+  spans byte-for-byte after filtering to completion-resolved
+  single-attempt requests (the kernel records the final attempt only);
+* the multi-window burn-rate monitor alerts on a pinned scenario whose
+  SLO targets are unattainable.
+"""
+
+import json
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.cluster.traces import synth_correlated_trace
+from repro.configs import get_config
+from repro.core.autoscaler import ConstantTarget
+from repro.core.policy import make_policy
+from repro.migration.config import MigrationSpec
+from repro.obs import ObsRecorder, dumps_jsonl
+from repro.obs.slo import SLOBurnConfig
+from repro.obs.spans import SpanCollector, span_sampled
+from repro.serving.engine import VectorizedServingEngine
+from repro.serving.jaxengine import JaxServingEngine
+from repro.serving.sim import ServingSimulator
+from repro.serving.token import TokenSchedulerConfig
+from repro.workloads import make_workload
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - environment-dependent
+    HAVE_HYPOTHESIS = False
+
+CFG = get_config("llama3.2-1b")
+HOURS = 1.0
+
+
+def _mini_trace(steps=int(HOURS * 60) + 60, seed=3):
+    zones = ["us-west-2a", "us-west-2b", "us-east-2a"]
+    zmap = {z: z[:-1] for z in zones}
+    return synth_correlated_trace(zones, zmap, steps=steps, dt=60.0,
+                                  seed=seed, max_capacity=4, name="mini")
+
+
+def _run(cls, *, replica_model="request", migration=None,
+         trace_sample=1.0, slo_burn=None, token_scheduler=None):
+    trace = _mini_trace()
+    reqs = make_workload("poisson", rate_per_s=0.8, seed=3).generate(
+        HOURS * 3600.0
+    )
+    kw = {}
+    if token_scheduler is not None:
+        kw["token_scheduler"] = token_scheduler
+    sim = cls(
+        trace, make_policy("spothedge"), reqs, CFG,
+        itype="g5.48xlarge", autoscaler=ConstantTarget(3),
+        timeout_s=60.0, concurrency=2, workload_name="poisson",
+        replica_model=replica_model, migration=migration,
+        obs=ObsRecorder(detail="full", trace_sample=trace_sample,
+                        slo_burn=slo_burn),
+        **kw,
+    )
+    return sim.run(HOURS * 3600.0 + 600.0)
+
+
+# ---------------------------------------------------------------------------
+# the tiling invariant
+
+
+def check_span_tiling(records):
+    """Every span record tiles [arrival, last close] contiguously."""
+    assert records == sorted(records, key=lambda r: r["ordinal"])
+    for rec in records:
+        assert rec["schema"] == 1 and rec["event"] == "span"
+        assert rec["attempts"] >= 1
+        assert rec["outcome"] in (
+            "ok", "timeout", "rejected", "unresolved"
+        )
+        segs = rec["segments"]
+        assert segs, rec
+        assert segs[0]["t0_s"] == rec["arrival_s"], rec
+        prev_end = None
+        for seg in segs:
+            assert seg["t1_s"] >= seg["t0_s"], rec
+            if prev_end is not None:
+                assert seg["t0_s"] == prev_end, rec
+            prev_end = seg["t1_s"]
+
+
+#: tap language of the random driver (arbitrary call orders must
+#: preserve tiling — out-of-protocol calls are no-ops by construction)
+_OPS = (
+    "dispatch", "start", "finish", "expire", "reject", "preempt",
+    "token_join", "token_chunk", "token_prefill_done", "finish_token",
+    "migrate", "migrate_arrive",
+)
+
+
+def drive_collector(ops):
+    """Replay (op_code, dt) pairs into a one-request collector and
+    check the tiling invariant on whatever comes out."""
+    col = SpanCollector(1.0, [SimpleNamespace(id=0, arrival_s=0.0)])
+    t = 0.0
+    for code, dt in ops:
+        t += dt
+        op = _OPS[code % len(_OPS)]
+        if op == "dispatch":
+            col.dispatch(0, t, 1, 0.01, 0.0, token=bool(code % 2))
+        elif op == "start":
+            col.start(0, t)
+        elif op == "finish":
+            col.finish(0, t, "ok", t)
+        elif op == "expire":
+            col.expire(0, t, 0.0)
+        elif op == "reject":
+            col.reject(0, t)
+        elif op == "preempt":
+            col.preempt(0, t)
+        elif op == "token_join":
+            col.token_join(0, t, prefilling=bool(code % 2))
+        elif op == "token_chunk":
+            col.token_chunk(0, 7)
+        elif op == "token_prefill_done":
+            col.token_prefill_done(0, t)
+        elif op == "finish_token":
+            col.finish_token(0, t, t, 0.0, "ok", t)
+        elif op == "migrate":
+            col.migrate(0, t, to_replica=2, transfer_s=0.5, plan_t=t)
+        elif op == "migrate_arrive":
+            col.migrate_arrive(0, t, replica=2)
+    col.finalize(t + 1.0)
+    recs = col.records()
+    check_span_tiling(recs)
+    return recs
+
+
+def test_span_tiling_driver_fixed_sample():
+    rng = np.random.default_rng(0)
+    for _ in range(100):
+        n = int(rng.integers(0, 40))
+        ops = [
+            (int(rng.integers(0, len(_OPS))), float(rng.uniform(0, 30)))
+            for _ in range(n)
+        ]
+        drive_collector(ops)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_span_tiling_hypothesis():
+    @settings(max_examples=80, deadline=None)
+    @given(st.lists(
+        st.tuples(
+            st.integers(0, len(_OPS) - 1),
+            st.floats(0.0, 30.0, allow_nan=False,
+                      allow_infinity=False),
+        ),
+        max_size=40,
+    ))
+    def prop(ops):
+        drive_collector(ops)
+
+    prop()
+
+
+def test_span_sampled_deterministic():
+    assert not any(span_sampled(o, 0.0) for o in range(1000))
+    assert all(span_sampled(o, 1.0) for o in range(1000))
+    picks = [span_sampled(o, 0.25) for o in range(4000)]
+    assert picks == [span_sampled(o, 0.25) for o in range(4000)]
+    frac = sum(picks) / len(picks)
+    assert 0.15 < frac < 0.35
+
+
+# ---------------------------------------------------------------------------
+# engine runs: tiling + byte identity
+
+
+@pytest.fixture(scope="module")
+def token_migration_runs():
+    spec = MigrationSpec(enabled=True, drain_threshold_s=2.0)
+    legacy = _run(ServingSimulator, replica_model="token",
+                  migration=spec)
+    vector = _run(VectorizedServingEngine, replica_model="token",
+                  migration=spec)
+    return legacy, vector
+
+
+def test_span_tiling_token_migration(token_migration_runs):
+    _, vector = token_migration_runs
+    recs = vector.obs.span_records()
+    assert recs
+    check_span_tiling(recs)
+    kinds = {s["name"] for r in recs for s in r["segments"]}
+    assert {"queue", "admit", "prefill", "decode"} <= kinds
+    if vector.token.n_migrated_seqs:
+        assert "transfer" in kinds
+
+
+def test_span_bytes_identical_token_migration(token_migration_runs):
+    legacy, vector = token_migration_runs
+    a = dumps_jsonl(legacy.obs.span_records())
+    b = dumps_jsonl(vector.obs.span_records())
+    assert a and a == b
+
+
+def test_sampling_subset_matches_hash(token_migration_runs):
+    del token_migration_runs   # ordering only; this run is cheap
+    res = _run(VectorizedServingEngine, trace_sample=0.25)
+    recs = res.obs.span_records()
+    assert recs
+    assert all(span_sampled(r["ordinal"], 0.25) for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# jax reconstruction parity
+
+
+def test_jax_span_parity_request_mode():
+    vector = _run(VectorizedServingEngine)
+    jaxr = _run(JaxServingEngine)
+    sv = vector.obs.span_records()
+    sj = jaxr.obs.span_records()
+    assert sv and sj
+    check_span_tiling(sv)
+    check_span_tiling(sj)
+
+    def served(r):
+        return any(s["name"] == "service" for s in r["segments"])
+
+    want = {
+        r["ordinal"]: r for r in sv
+        if r["attempts"] == 1 and served(r)
+        and r["outcome"] in ("ok", "timeout")
+    }
+    got = {r["ordinal"]: r for r in sj}
+    # the kernel resolves spans exactly for completion-scattered
+    # requests; this fixture retries none of them, so the filtered
+    # vector set and the jax set coincide ordinal-for-ordinal
+    assert set(got) == set(want)
+    for o, rec in want.items():
+        assert json.dumps(got[o], sort_keys=True) == \
+            json.dumps(rec, sort_keys=True)
+    # headline metrics stay oracle-equal with tracing on
+    assert jaxr.n_completed == vector.n_completed
+    assert jaxr.n_failed == vector.n_failed
+
+
+# ---------------------------------------------------------------------------
+# burn-rate alert
+
+
+def test_burn_alert_fires_pinned():
+    res = _run(
+        VectorizedServingEngine, replica_model="token",
+        slo_burn=SLOBurnConfig(),   # SRE-workbook defaults
+        token_scheduler=TokenSchedulerConfig(
+            slo_ttft_s=0.2, slo_tpot_s=0.0008
+        ),
+    )
+    burns = [e.to_record() for e in res.obs.events
+             if e.KIND == "slo_burn"]
+    assert burns
+    alerting = [r for r in burns if r.get("alerting")]
+    assert alerting, "unattainable SLO targets must trip the alert"
+    names = {n for r in alerting for n in r["alerting"]}
+    assert names & {"ttft", "tpot"}
+    summ = res.obs.slo_burn_summary()
+    assert summ is not None
+    assert summ["alert_windows"] == len(alerting)
+    assert summ["windows"] == len(burns)
